@@ -1,0 +1,72 @@
+"""Shared benchmark runner for the paper's trace-driven evaluation."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core import nlip, obta, replica_deletion, water_filling
+from repro.core.rd_plus import replica_deletion_plus
+from repro.runtime import ClusterSimulator
+from repro.traces import TraceConfig, generate_trace
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# name -> (assign_fn or None, reorder, accelerated)
+ALGORITHMS: dict[str, tuple[Callable | None, bool, bool]] = {
+    "nlip": (nlip, False, False),
+    "obta": (obta, False, False),
+    "wf": (water_filling, False, False),
+    "rd": (lambda p: replica_deletion(p, 0), False, False),
+    "rd+": (lambda p: replica_deletion_plus(p, 0), False, False),
+    "ocwf": (None, True, False),
+    "ocwf-acc": (None, True, True),
+}
+
+FIFO_ALGOS = ["nlip", "obta", "wf", "rd", "rd+"]
+ALL_ALGOS = FIFO_ALGOS + ["ocwf", "ocwf-acc"]
+
+
+def run_cell(
+    cfg: TraceConfig, algo: str
+) -> dict[str, float]:
+    """Simulate one (trace config, algorithm) cell; returns metrics."""
+    jobs = generate_trace(cfg)
+    assign, reorder, accelerated = ALGORITHMS[algo]
+    sim = ClusterSimulator(
+        cfg.n_servers,
+        assign or water_filling,
+        reorder=reorder,
+        accelerated=accelerated,
+    )
+    t0 = time.perf_counter()
+    res = sim.run(jobs)
+    wall = time.perf_counter() - t0
+    values = np.asarray(list(res.jct.values()), dtype=np.float64)
+    return {
+        "mean_jct": res.mean_jct,
+        "p50_jct": float(np.percentile(values, 50)),
+        "p90_jct": float(np.percentile(values, 90)),
+        "p99_jct": float(np.percentile(values, 99)),
+        "max_jct": float(values.max()),
+        "mean_overhead_us": res.mean_overhead_s * 1e6,
+        "makespan": float(res.makespan),
+        "wall_s": wall,
+    }
+
+
+def write_csv(path: str, rows: list[dict], fieldnames: list[str]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=fieldnames)
+        writer.writeheader()
+        writer.writerows(rows)
+
+
+def emit(name: str, us_per_call: float, derived: float) -> None:
+    """The harness-level CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived:.2f}", flush=True)

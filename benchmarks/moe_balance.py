@@ -1,0 +1,105 @@
+"""Framework bench: the paper's WF applied to MoE expert-replica routing.
+
+Serving-time scenario (DESIGN.md §2): experts are replicated across
+devices (replicas = the paper's data-chunk copies); token groups that
+picked the same expert set = task groups; per-device queued tokens = busy
+times.  The on-device vectorized water-filling (:mod:`repro.core.wf_jax`)
+chooses which replica serves which tokens.
+
+Compares max per-device queue (the step-completion proxy) for:
+  - ``static``: every group goes to its expert's first replica;
+  - ``random``: uniform random replica per group;
+  - ``greedy``: least-loaded replica at decision time (token-sequential);
+  - ``wf``: the paper's water-filling (jit-compiled, runs on device).
+
+Emits ``moe/<policy>`` rows: us_per_call = routing decision time,
+derived = max device queue after routing (lower is better).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wf_jax import water_fill_groups
+
+from .common import emit
+
+
+def _scenario(
+    n_devices: int, n_experts: int, replicas: int, n_groups: int, seed: int
+):
+    rng = np.random.default_rng(seed)
+    # expert e lives on `replicas` distinct devices
+    placement = np.stack(
+        [rng.choice(n_devices, size=replicas, replace=False) for _ in range(n_experts)]
+    )
+    # token groups: group g wants expert e_g with d_g tokens (Zipf-ish load)
+    experts = rng.zipf(1.3, size=n_groups) % n_experts
+    demands = rng.integers(16, 512, size=n_groups)
+    busy0 = rng.integers(0, 64, size=n_devices)  # pre-existing queues
+    group_mask = np.zeros((n_groups, n_devices), dtype=bool)
+    for g in range(n_groups):
+        group_mask[g, placement[experts[g]]] = True
+    return busy0, group_mask, demands
+
+
+def run(quick: bool = False) -> None:
+    n_devices, n_experts, replicas = (16, 32, 4) if quick else (64, 128, 4)
+    n_groups = 64 if quick else 256
+    mu = np.ones(n_devices, dtype=np.int32)  # tokens/step per device (uniform)
+
+    wf = jax.jit(water_fill_groups)
+    results: dict[str, list[float]] = {p: [] for p in ("static", "random", "greedy", "wf")}
+    times: dict[str, list[float]] = {p: [] for p in results}
+    for seed in range(3):
+        busy0, group_mask, demands = _scenario(
+            n_devices, n_experts, replicas, n_groups, seed
+        )
+        rng = np.random.default_rng(seed + 100)
+
+        # static / random / greedy baselines (host logic)
+        for policy in ("static", "random", "greedy"):
+            q = busy0.astype(np.int64).copy()
+            t0 = time.perf_counter()
+            for g in range(n_groups):
+                devs = np.flatnonzero(group_mask[g])
+                if policy == "static":
+                    d = devs[0]
+                elif policy == "random":
+                    d = rng.choice(devs)
+                else:  # greedy: least-loaded replica
+                    d = devs[np.argmin(q[devs])]
+                q[d] += demands[g]
+            times[policy].append(time.perf_counter() - t0)
+            results[policy].append(float(q.max()))
+
+        # the paper's WF, vectorized on device
+        args = (
+            jnp.asarray(busy0, jnp.int32),
+            jnp.asarray(mu),
+            jnp.asarray(group_mask),
+            jnp.asarray(demands, jnp.int32),
+        )
+        alloc, _, _ = wf(*args)  # warm-up compile
+        jax.block_until_ready(alloc)
+        t0 = time.perf_counter()
+        alloc, _, phi = wf(*args)
+        jax.block_until_ready(alloc)
+        times["wf"].append(time.perf_counter() - t0)
+        q = busy0 + np.asarray(alloc).sum(axis=0)
+        results["wf"].append(float(q.max()))
+
+    for policy in results:
+        emit(
+            f"moe/{policy}",
+            float(np.mean(times[policy])) * 1e6,
+            float(np.mean(results[policy])),
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 14: JCT vs computing capacity.
+
+α = 2, utilization = 75%; sweep the per-(server, job) capacity range
+``μ_m^c ~ U{lo..hi}``.  Validates: higher capacity → lower JCT; relative
+algorithm ordering unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.traces import TraceConfig
+
+from .common import ALL_ALGOS, RESULTS_DIR, emit, run_cell, write_csv
+
+CAPACITY_RANGES = ((1, 3), (2, 4), (3, 5), (4, 6), (5, 7))
+
+
+def run(
+    cap_ranges: tuple[tuple[int, int], ...] = CAPACITY_RANGES,
+    base: TraceConfig = TraceConfig(utilization=0.75, zipf_alpha=2.0),
+    algos: list[str] | None = None,
+) -> list[dict]:
+    rows = []
+    for lo, hi in cap_ranges:
+        cfg = dataclasses.replace(base, cap_lo=lo, cap_hi=hi)
+        for algo in algos or ALL_ALGOS:
+            metrics = run_cell(cfg, algo)
+            row = {"cap_lo": lo, "cap_hi": hi, "algo": algo}
+            row.update(metrics)
+            rows.append(row)
+            emit(
+                f"fig14/cap{lo}-{hi}/{algo}",
+                metrics["mean_overhead_us"],
+                metrics["mean_jct"],
+            )
+    write_csv(os.path.join(RESULTS_DIR, "fig14.csv"), rows, list(rows[0].keys()))
+    return rows

@@ -1,0 +1,53 @@
+"""Paper Figs. 10-12: JCT + overhead vs Zipf skew α at each utilization.
+
+For each system utilization (25% / 50% / 75%) sweep the data-placement
+skew α and run every algorithm.  Emits one CSV per figure under
+``results/`` and the harness CSV lines to stdout.
+
+Claims validated (paper Sec. V-B):
+- OBTA ≈ NLIP in JCT; OBTA has roughly half the computation overhead;
+- WF close to OBTA/NLIP in JCT with far lower overhead;
+- FIFO algorithms degrade as α grows; OCWF/OCWF-ACC stay flat;
+- OCWF-ACC ≈ OCWF in JCT with ~half the overhead (early-exit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.traces import TraceConfig
+
+from .common import ALL_ALGOS, RESULTS_DIR, emit, run_cell, write_csv
+
+FIGS = {0.25: "fig10", 0.50: "fig11", 0.75: "fig12"}
+
+
+def run(
+    utils: tuple[float, ...] = (0.25, 0.50, 0.75),
+    alphas: tuple[float, ...] = (0.0, 1.0, 2.0),
+    base: TraceConfig = TraceConfig(),
+    algos: list[str] | None = None,
+) -> list[dict]:
+    rows = []
+    for util in utils:
+        fig = FIGS.get(util, f"fig_util{int(util * 100)}")
+        for alpha in alphas:
+            cfg = dataclasses.replace(base, utilization=util, zipf_alpha=alpha)
+            for algo in algos or ALL_ALGOS:
+                metrics = run_cell(cfg, algo)
+                row = {"figure": fig, "util": util, "alpha": alpha, "algo": algo}
+                row.update(metrics)
+                rows.append(row)
+                emit(
+                    f"{fig}/alpha{alpha:g}/{algo}",
+                    metrics["mean_overhead_us"],
+                    metrics["mean_jct"],
+                )
+        fig_rows = [r for r in rows if r["figure"] == fig]
+        write_csv(
+            os.path.join(RESULTS_DIR, f"{fig}.csv"),
+            fig_rows,
+            list(fig_rows[0].keys()),
+        )
+    return rows

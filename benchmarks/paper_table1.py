@@ -1,0 +1,33 @@
+"""Paper Table I / Fig. 13: JCT vs number of available servers.
+
+α = 2, utilization = 75% (high contention), p ∈ {4, 6, 8, 10, 12}
+available servers per task group.  Validates: more available servers →
+lower JCT; OCWF == OCWF-ACC; relative algorithm ordering stable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.traces import TraceConfig
+
+from .common import ALL_ALGOS, RESULTS_DIR, emit, run_cell, write_csv
+
+
+def run(
+    p_values: tuple[int, ...] = (4, 6, 8, 10, 12),
+    base: TraceConfig = TraceConfig(utilization=0.75, zipf_alpha=2.0),
+    algos: list[str] | None = None,
+) -> list[dict]:
+    rows = []
+    for p in p_values:
+        cfg = dataclasses.replace(base, avail_lo=p, avail_hi=p)
+        for algo in algos or ALL_ALGOS:
+            metrics = run_cell(cfg, algo)
+            row = {"p": p, "algo": algo}
+            row.update(metrics)
+            rows.append(row)
+            emit(f"table1/p{p}/{algo}", metrics["mean_overhead_us"], metrics["mean_jct"])
+    write_csv(os.path.join(RESULTS_DIR, "table1.csv"), rows, list(rows[0].keys()))
+    return rows

@@ -1,0 +1,66 @@
+"""Regenerate the markdown tables for EXPERIMENTS.md from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report
+
+Writes results/dryrun_table.md and results/roofline_table.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def dryrun_table() -> str:
+    cells = [json.load(open(f)) for f in sorted(glob.glob(os.path.join(RESULTS, "dryrun", "*.json")))]
+    lines = [
+        "| arch | shape | mesh | status | compile s | flops/dev | args GiB | temp GiB | collective MiB (wire/dev) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] == "ok":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok | {c['compile_s']} | "
+                f"{c['flops_per_device']:.2e} | {c['argument_bytes'] / 2**30:.2f} | "
+                f"{c['temp_bytes'] / 2**30:.2f} | {c['collective_wire_bytes'] / 2**20:.0f} |"
+            )
+        else:
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['status']} | — | — | — | — | — |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    cells = [json.load(open(f)) for f in sorted(glob.glob(os.path.join(RESULTS, "roofline", "*.json")))]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | skipped | — | — | — |")
+            continue
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_term_s']:.3f} | "
+            f"{c['memory_term_s']:.3f} | {c['collective_term_s']:.3f} | "
+            f"{c['dominant']} | {c['model_flops']:.2e} | "
+            f"{c['useful_compute_ratio']:.3f} | {c['roofline_fraction']:.4f} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "dryrun_table.md"), "w") as f:
+        f.write(dryrun_table() + "\n")
+    with open(os.path.join(RESULTS, "roofline_table.md"), "w") as f:
+        f.write(roofline_table() + "\n")
+    print("wrote results/dryrun_table.md, results/roofline_table.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Roofline summary: reads results/{dryrun,roofline}/*.json artifacts.
+
+Emits one ``roofline/<arch>/<shape>`` row per cell:
+us_per_call = the binding roofline term (µs), derived = roofline fraction
+(the achievable-MFU score).  Also regenerates the markdown tables used in
+EXPERIMENTS.md (results/roofline_table.md).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import RESULTS_DIR, emit
+
+
+def _load(subdir: str) -> list[dict]:
+    path = os.path.join(RESULTS_DIR, subdir, "*.json")
+    cells = [json.load(open(f)) for f in sorted(glob.glob(path))]
+    if not cells:
+        raise FileNotFoundError(f"no artifacts under {path}")
+    return cells
+
+
+def run() -> None:
+    roof = [c for c in _load("roofline") if c.get("status") == "ok"]
+    dry = {
+        (c["arch"], c["shape"], c["mesh"]): c
+        for c in _load("dryrun")
+        if c.get("status") == "ok"
+    }
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful ratio | roofline frac | HBM GiB/dev (args+temp) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(roof, key=lambda c: (c["arch"], c["shape"])):
+        d = dry.get((c["arch"], c["shape"], "pod16x16"), {})
+        hbm = (d.get("argument_bytes", 0) + d.get("temp_bytes", 0)) / 2**30
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_term_s']:.4f} | "
+            f"{c['memory_term_s']:.4f} | {c['collective_term_s']:.4f} | "
+            f"{c['dominant']} | {c['useful_compute_ratio']:.3f} | "
+            f"{c['roofline_fraction']:.4f} | {hbm:.1f} |"
+        )
+        emit(
+            f"roofline/{c['arch']}/{c['shape']}",
+            max(
+                c["compute_term_s"], c["memory_term_s"], c["collective_term_s"]
+            )
+            * 1e6,
+            c["roofline_fraction"],
+        )
+    out = os.path.join(RESULTS_DIR, "roofline_table.md")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

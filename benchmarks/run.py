@@ -1,0 +1,87 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (Figs. 10-12, Table I/Fig. 13,
+Fig. 14), plus framework benches (MoE water-filling balance; roofline
+summary if dry-run artifacts exist).  Prints ``name,us_per_call,derived``
+CSV lines and writes detailed CSVs under ``results/``.
+
+Modes:
+  --quick   reduced trace (CI smoke, ~1 min)
+  default   paper-scale trace (250 jobs / ~113k tasks), α ∈ {0,1,2}
+  --full    paper-scale with the full α sweep {0,0.5,1,1.5,2}
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+from repro.traces import TraceConfig
+
+from .common import ALL_ALGOS
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--quick", action="store_true", help="reduced scale")
+    parser.add_argument("--full", action="store_true", help="full alpha sweep")
+    parser.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset: figs,table1,fig14,moe,roofline",
+    )
+    args = parser.parse_args(argv)
+
+    which = set((args.only or "figs,table1,fig14,moe,roofline").split(","))
+    t0 = time.time()
+    print("name,us_per_call,derived", flush=True)
+
+    if args.quick:
+        base = TraceConfig(n_jobs=60, total_tasks=20_000)
+        alphas: tuple[float, ...] = (0.0, 2.0)
+        utils: tuple[float, ...] = (0.5,)
+        p_values: tuple[int, ...] = (4, 8, 12)
+        cap_ranges: tuple[tuple[int, int], ...] = ((1, 3), (3, 5), (5, 7))
+    else:
+        base = TraceConfig()
+        alphas = (0.0, 0.5, 1.0, 1.5, 2.0) if args.full else (0.0, 1.0, 2.0)
+        utils = (0.25, 0.50, 0.75)
+        p_values = (4, 6, 8, 10, 12)
+        cap_ranges = ((1, 3), (2, 4), (3, 5), (4, 6), (5, 7))
+
+    if "figs" in which:
+        from . import paper_figs
+
+        paper_figs.run(utils=utils, alphas=alphas, base=base, algos=ALL_ALGOS)
+    if "table1" in which:
+        from . import paper_table1
+
+        t1_base = dataclasses.replace(base, utilization=0.75, zipf_alpha=2.0)
+        paper_table1.run(p_values=p_values, base=t1_base, algos=ALL_ALGOS)
+    if "fig14" in which:
+        from . import paper_fig14
+
+        f14_base = dataclasses.replace(base, utilization=0.75, zipf_alpha=2.0)
+        paper_fig14.run(cap_ranges=cap_ranges, base=f14_base, algos=ALL_ALGOS)
+    if "moe" in which:
+        from . import moe_balance
+
+        moe_balance.run(quick=args.quick)
+    if "roofline" in which:
+        try:
+            from . import roofline
+
+            roofline.run()
+        except (FileNotFoundError, ImportError):
+            print(
+                "# roofline: no dry-run artifacts yet (run launch/dryrun.py)",
+                file=sys.stderr,
+            )
+
+    print(f"# total bench wall time: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

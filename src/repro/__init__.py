@@ -1,0 +1,3 @@
+"""repro: the paper's scheduling core + the framework around it."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,15 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, elastic restore."""
+
+from .store import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

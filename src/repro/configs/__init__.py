@@ -1,0 +1,39 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``ARCHS``.
+
+One module per assigned architecture; each exports ``CONFIG`` (the exact
+published shape) and ``smoke_config()`` (a reduced same-family config for
+CPU tests).  Input shapes (seq × batch) are in :mod:`repro.configs.shapes`.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models import ModelConfig
+
+ARCHS = (
+    "qwen3-moe-235b-a22b",
+    "deepseek-v3-671b",
+    "qwen2.5-32b",
+    "qwen2-72b",
+    "qwen3-32b",
+    "qwen1.5-4b",
+    "zamba2-2.7b",
+    "mamba2-130m",
+    "llava-next-mistral-7b",
+    "whisper-medium",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke_config()

@@ -1,0 +1,57 @@
+"""Data-locality-aware task assignment and scheduling (the paper's core).
+
+Algorithms (paper Secs. III-IV):
+
+- :func:`obta` / :func:`nlip` — exact balanced assignment (max-flow oracle,
+  with/without the ``[Φ^-, Φ^+]`` search-space narrowing).
+- :func:`water_filling` — the K_c-approximate water-filling heuristic.
+- :func:`replica_deletion` — the RD heuristic.
+- :func:`reorder_schedule` — OCWF / OCWF-ACC job reordering with early-exit.
+- :mod:`repro.core.wf_jax` — on-device vectorized water-filling for TPU.
+"""
+
+from .bounds import phi_bounds, phi_minus, phi_plus
+from .flow import feasible_assignment
+from .instance import (
+    Assignment,
+    AssignmentProblem,
+    Job,
+    TaskGroup,
+    group_tasks,
+)
+from .obta import nlip, obta, solve_exact
+from .rd import replica_deletion
+from .reorder import OutstandingJob, ReorderStats, reorder_schedule
+from .waterlevel import water_fill_alloc, water_level
+from .wf import water_filling, wf_phi
+
+ALGORITHMS = {
+    "nlip": nlip,
+    "obta": obta,
+    "wf": water_filling,
+    "rd": replica_deletion,
+}
+
+__all__ = [
+    "ALGORITHMS",
+    "Assignment",
+    "AssignmentProblem",
+    "Job",
+    "TaskGroup",
+    "group_tasks",
+    "phi_bounds",
+    "phi_minus",
+    "phi_plus",
+    "feasible_assignment",
+    "nlip",
+    "obta",
+    "solve_exact",
+    "replica_deletion",
+    "OutstandingJob",
+    "ReorderStats",
+    "reorder_schedule",
+    "water_fill_alloc",
+    "water_level",
+    "water_filling",
+    "wf_phi",
+]

@@ -1,0 +1,5 @@
+"""Locality-aware input pipeline (the paper's scheduler in the data plane)."""
+
+from .pipeline import LocalityAwareLoader, ShardStore
+
+__all__ = ["LocalityAwareLoader", "ShardStore"]

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three files:
+
+- ``<name>.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling;
+- ``ops.py``    — jit'd dispatch wrappers (kernel ⇄ pure-jnp reference);
+- ``ref.py``    — the pure-jnp oracle the tests allclose against.
+
+On this CPU container kernels execute with ``interpret=True``; on real
+TPU the same ``pallas_call`` lowers to Mosaic.  The paper's contribution
+is scheduling (no kernel-level claim — see DESIGN.md); these kernels
+cover the serving/training hot spots of the *framework*: flash attention
+(train/prefill), decode attention (one token vs long KV), the Mamba2 SSD
+chunk scan, and fused RMSNorm.
+"""
+
+from .ops import decode_attention, flash_attention, rmsnorm_fused, ssd_scan
+
+__all__ = [
+    "decode_attention",
+    "flash_attention",
+    "rmsnorm_fused",
+    "ssd_scan",
+]

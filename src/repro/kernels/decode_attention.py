@@ -1,0 +1,79 @@
+"""Single-token decode attention over a long KV cache (Pallas).
+
+Grid: ``(batch, q_heads)``; each program streams the KV rows of its
+(batch, kv-head) in BLOCK_K slices with the online-softmax recurrence,
+masking positions beyond the live length ``pos``.  This is the
+latency-critical serving kernel: one query row against up to 512k cached
+keys (``long_500k``), memory-bound at ~2·S·hd bytes per head.
+
+VMEM per program: one (BLOCK_K, hd) K slice + one V slice (64 KiB at
+512·64·2) + fp32 accumulators (hd) — tiny; the win on TPU is fusing the
+two HBM streams with the softmax so the cache is read exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (hd,)
+    hd = q.shape[0]
+    t = k_ref.shape[2]
+    pos = pos_ref[0]  # live length - 1 (last valid index)
+    n_blocks = t // BLOCK_K
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * BLOCK_K, BLOCK_K)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * BLOCK_K, BLOCK_K)].astype(jnp.float32)
+        s = k @ q  # (BK,)
+        idx = j * BLOCK_K + jax.lax.iota(jnp.int32, BLOCK_K)
+        s = jnp.where(idx <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum()
+        acc = acc * corr + p @ v
+        return m_new, l_new, acc
+
+    # skip blocks entirely past the live length
+    last = jnp.minimum(pos // BLOCK_K + 1, n_blocks)
+    init = (jnp.float32(NEG_INF), jnp.float32(0.0), jnp.zeros((hd,), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, last, body, init)
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_pallas(
+    q: jax.Array,  # (B, H, hd) — one token per sequence
+    k: jax.Array,  # (B, Hkv, T, hd)
+    v: jax.Array,  # (B, Hkv, T, hd)
+    pos: jax.Array,  # (B,) int32 — last valid cache index per sequence
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    assert t % BLOCK_K == 0, t
+    group = h // hkv
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=hd**-0.5),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+            pl.BlockSpec((1, 1, hd), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda bi, hi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda bi, hi: (bi, hi // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(pos, q, k, v)

@@ -1,0 +1,104 @@
+"""Flash attention (GQA, causal) as a Pallas TPU kernel.
+
+Grid: ``(batch, q_heads, S // BLOCK_Q)``.  Each program holds one query
+block in VMEM and walks KV blocks with the online-softmax recurrence,
+**skipping blocks strictly above the causal diagonal** (the FLOP saving
+the XLA chunked path cannot express — see EXPERIMENTS.md §Perf).
+
+VMEM budget per program (bf16 inputs, fp32 accumulators):
+
+    q block   BLOCK_Q·hd·2          =  32 KiB   (128·128)
+    k/v       2·BLOCK_K·hd·2        =  64 KiB   (128·128 each)
+    acc/m/l   BLOCK_Q·hd·4 + 2·BLOCK_Q·4 ≈ 66 KiB
+
+comfortably inside the ~16 MiB/core VMEM with room for double-buffered
+DMA of the KV stream.  MXU alignment: BLOCK_Q = BLOCK_K = hd = 128.
+
+The kernel receives the *full* K/V rows for its (batch, kv-head) — the
+BlockSpec maps every q-block program of the same head to the same KV
+tile, and Mosaic pipelines the inner-loop slices from there.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (BQ, hd)
+    bq, hd = q.shape
+    t = k_ref.shape[2]
+    n_kv_blocks = t // BLOCK_K
+    # causal: query block qi covers rows [qi·BQ, qi·BQ+BQ); KV blocks with
+    # start > last row are fully masked — skip them entirely.
+    last_block = jnp.where(
+        causal,
+        jnp.minimum(((qi + 1) * BLOCK_Q - 1) // BLOCK_K + 1, n_kv_blocks),
+        n_kv_blocks,
+    )
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * BLOCK_K, BLOCK_K)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * BLOCK_K, BLOCK_K)].astype(jnp.float32)
+        s = q @ k.T  # (BQ, BK)
+        if causal:
+            rows = qi * BLOCK_Q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = j * BLOCK_K + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc
+
+    init = (
+        jnp.full((bq,), NEG_INF, jnp.float32),
+        jnp.zeros((bq,), jnp.float32),
+        jnp.zeros((bq, hd), jnp.float32),
+    )
+    m, l, acc = jax.lax.fori_loop(0, last_block, body, init)
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, Hkv, T, hd)
+    v: jax.Array,  # (B, Hkv, T, hd)
+    *,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    assert s % BLOCK_Q == 0 and t % BLOCK_K == 0, (s, t)
+    group = h // hkv
+    grid = (b, h, s // BLOCK_Q)
+    kernel = functools.partial(
+        _flash_kernel, scale=hd**-0.5, causal=causal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, BLOCK_Q, hd), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+            pl.BlockSpec((1, 1, t, hd), lambda bi, hi, qi: (bi, hi // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, BLOCK_Q, hd), lambda bi, hi, qi: (bi, hi, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

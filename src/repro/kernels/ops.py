@@ -1,0 +1,44 @@
+"""Dispatch wrappers: Pallas kernel on TPU, interpret mode on CPU,
+pure-jnp reference as the universal fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rmsnorm_pallas
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["flash_attention", "decode_attention", "ssd_scan", "rmsnorm_fused"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, use_pallas=True):
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, interpret=not _on_tpu()
+        )
+    return _ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, pos, *, use_pallas=True):
+    if use_pallas:
+        return decode_attention_pallas(q, k, v, pos, interpret=not _on_tpu())
+    return _ref.decode_attention_ref(q, k, v, pos)
+
+
+def ssd_scan(x, dt, a, bm, cm, *, use_pallas=True):
+    if use_pallas:
+        return ssd_scan_pallas(x, dt, a, bm, cm, interpret=not _on_tpu())
+    return _ref.ssd_scan_ref(x, dt, a, bm, cm)
+
+
+def rmsnorm_fused(x, g, *, eps=1e-6, use_pallas=True):
+    if use_pallas:
+        return rmsnorm_pallas(x, g, eps=eps, interpret=not _on_tpu())
+    return _ref.rmsnorm_ref(x, g, eps)

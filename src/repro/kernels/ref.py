@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every kernel (the allclose targets).
+
+These share math with the model code (``repro.models.attention`` /
+``repro.models.ssm``) but are standalone so a kernel bug cannot hide
+behind a shared helper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """q (B,H,S,hd), k/v (B,Hkv,T,hd) → (B,H,S,hd); fp32 softmax."""
+    b, h, s, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, s, hd)
+    logits = jnp.einsum("bngsh,bnth->bngst", qg, k).astype(jnp.float32)
+    logits = logits * hd**-0.5
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,bnth->bngsh", p.astype(q.dtype), v)
+    return out.reshape(b, h, s, hd)
+
+
+def decode_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array
+) -> jax.Array:
+    """q (B,H,hd), k/v (B,Hkv,T,hd), pos (B,) → (B,H,hd)."""
+    b, h, hd = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    logits = jnp.einsum("bngh,bnth->bngt", qg, k).astype(jnp.float32) * hd**-0.5
+    valid = jnp.arange(t)[None, :] <= pos[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngt,bnth->bngh", p.astype(q.dtype), v)
+    return out.reshape(b, h, hd)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    a: jax.Array,  # (H,)
+    bm: jax.Array,  # (B, S, N)
+    cm: jax.Array,  # (B, S, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential (position-by-position) SSM recurrence — the slowest,
+    most obviously-correct form."""
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+
+    def step(hstate, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a[None, :])  # (B,H)
+        xd = xt * dtt[..., None]
+        hstate = hstate * decay[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xd, bt
+        )
+        y = jnp.einsum("bhpn,bn->bhp", hstate, ct)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        bm.transpose(1, 0, 2).astype(jnp.float32),
+        cm.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_last
+
+
+def rmsnorm_ref(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * g.astype(jnp.float32)).astype(x.dtype)

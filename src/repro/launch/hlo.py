@@ -1,0 +1,102 @@
+"""Post-SPMD HLO analysis: collective bytes for the roofline.
+
+``compiled.cost_analysis()`` has no collective traffic, so we parse the
+partitioned HLO text and sum *operand* bytes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), converting to estimated bytes-on-the-wire per device
+with ring-algorithm factors:
+
+  all-reduce      2·(n-1)/n · operand        (reduce-scatter + all-gather)
+  all-gather      (n-1)/n · result           (operand is the shard)
+  reduce-scatter  (n-1)/n · operand
+  all-to-all      (n-1)/n · operand
+  collective-permute  1 · operand            (single hop)
+
+``n`` is the replica-group size parsed from ``replica_groups``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+__all__ = ["CollectiveStats", "collective_stats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\("
+)
+# replica_groups=[8,2]<=[16] (iota form) or {{0,1},{2,3}} (explicit form)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dims.strip() == "":
+        n = 1
+    else:
+        n = int(np.prod([int(d) for d in dims.split(",") if d]))
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict  # kind -> count
+    operand_bytes: dict  # kind -> per-device operand bytes (summed)
+    wire_bytes: float  # ring-estimate bytes on the wire per device
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    ops: dict = {}
+    operand_bytes: dict = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # result shape(s): before the '='; operand shapes: inside parens
+        head, _, tail = line.partition("=")
+        result_shapes = _SHAPE_RE.findall(tail[: tail.find("(")])
+        arg_region = tail[tail.find("(") + 1 :]
+        # strip metadata chunks that also contain shapes
+        arg_region = arg_region.split("replica_groups")[0]
+        operand_shapes = _SHAPE_RE.findall(arg_region)
+        n = _group_size(line)
+        op_b = sum(_shape_bytes(d, s) for d, s in operand_shapes)
+        res_b = sum(_shape_bytes(d, s) for d, s in result_shapes)
+        ops[kind] = ops.get(kind, 0) + 1
+        operand_bytes[kind] = operand_bytes.get(kind, 0) + op_b
+        if kind == "all-reduce":
+            wire += 2 * (n - 1) / n * op_b
+        elif kind == "all-gather":
+            wire += (n - 1) / n * res_b
+        elif kind in ("reduce-scatter", "all-to-all"):
+            wire += (n - 1) / n * op_b
+        else:  # collective-permute
+            wire += op_b
+    return CollectiveStats(ops=ops, operand_bytes=operand_bytes, wire_bytes=wire)

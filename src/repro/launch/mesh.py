@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function — not a module-level constant — so importing this module never
+touches jax device state (the dry-run sets the host-device-count flag
+before its first jax import; tests and benches must keep seeing 1 CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is
+    pure data parallelism across the pod-interconnect (DCN), scaling to N
+    pods by changing the leading extent."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,61 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> --smoke``.
+
+Continuous batching over a shared decode cache with WF replica routing;
+production path uses `serve_param_sharding` (resident TP weights,
+sequence-parallel KV — EXPERIMENTS.md §Perf #3).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import init_params
+from repro.serve.engine import ReplicaRouter, Request, ServeEngine
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--arch", choices=ARCHS, default="qwen1.5-4b")
+    parser.add_argument("--smoke", action="store_true")
+    parser.add_argument("--requests", type=int, default=8)
+    parser.add_argument("--max-new", type=int, default=16)
+    parser.add_argument("--slots", type=int, default=4)
+    parser.add_argument("--replicas", type=int, default=1)
+    args = parser.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(
+        params, cfg, batch_slots=args.slots, max_len=256, eos_token=-1
+    )
+    router = ReplicaRouter(args.replicas, tokens_per_step=1024)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for rid in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab, int(rng.integers(4, 12))).astype(np.int32)
+        placed = router.route(len(prompt) + args.max_new)
+        print(f"req {rid}: {len(prompt)} prompt tokens → replica {min(placed)}")
+        engine.submit(Request(rid, prompt, max_new_tokens=args.max_new))
+
+    done = []
+    steps = 0
+    while len(done) < args.requests and steps < 10_000:
+        done += engine.step()
+        router.drain()
+        steps += 1
+    dt = time.perf_counter() - t0
+    total_new = sum(len(r.generated) for r in done)
+    print(
+        f"served {len(done)} requests / {total_new} tokens in {dt:.1f}s "
+        f"({steps} engine steps)"
+    )
+
+
+if __name__ == "__main__":
+    main()

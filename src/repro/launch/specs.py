@@ -1,0 +1,104 @@
+"""Abstract input/state specs for lowering (ShapeDtypeStruct — weak-type
+correct, shardable, zero allocation) plus the jit-able step builders the
+dry-run lowers, one per shape kind."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import (
+    ModelConfig,
+    decode_step,
+    init_decode_cache,
+    init_params,
+    prefill,
+)
+from repro.train import AdamWConfig, adamw_init, make_train_step
+
+__all__ = ["input_specs", "state_specs", "step_fn_for"]
+
+
+def _sds(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract model inputs for an (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    elif shape.kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    else:
+        raise ValueError(shape.kind)
+    if cfg.block_pattern == "encdec" and shape.kind != "decode":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype
+        )
+    if cfg.block_pattern == "vlm" and shape.kind != "decode":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), cfg.jnp_dtype
+        )
+    return batch
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: AdamWConfig) -> dict:
+    """Abstract train state (params + optimizer) via eval_shape."""
+
+    def build():
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        return {"params": params, "opt": adamw_init(opt_cfg, params)}
+
+    return jax.eval_shape(build)
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> Any:
+    params = param_specs(cfg)
+    return jax.eval_shape(
+        lambda: init_decode_cache(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params),
+            cfg,
+            batch,
+            seq,
+        )
+    )
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeSpec, opt_cfg: AdamWConfig,
+                *, logits_sharding=None, microbatches: int = 1):
+    """(callable, abstract args) pair for the cell's step function."""
+    if shape.kind == "train":
+        fn = make_train_step(
+            cfg, opt_cfg, logits_sharding=logits_sharding,
+            microbatches=microbatches,
+        )
+        args = (state_specs(cfg, opt_cfg), input_specs(cfg, shape))
+        return fn, args
+    if shape.kind == "prefill":
+        fn = lambda params, batch: prefill(params, cfg, batch)
+        args = (param_specs(cfg), input_specs(cfg, shape))
+        return fn, args
+    if shape.kind == "decode":
+        fn = lambda params, tokens, cache: decode_step(params, cfg, tokens, cache)
+        args = (
+            param_specs(cfg),
+            input_specs(cfg, shape)["tokens"],
+            cache_specs(cfg, shape.global_batch, shape.seq_len),
+        )
+        return fn, args
+    raise ValueError(shape.kind)

@@ -1,0 +1,22 @@
+"""Model zoo: configs + functional init/forward/prefill/decode."""
+
+from .config import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from .model import (
+    decode_step,
+    forward_train,
+    init_decode_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "MLAConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "decode_step",
+    "forward_train",
+    "init_decode_cache",
+    "init_params",
+    "prefill",
+]

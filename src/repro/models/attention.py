@@ -1,0 +1,374 @@
+"""Attention: GQA (qk-norm / qkv-bias options) and DeepSeek-style MLA.
+
+Three execution paths share the same parameters:
+
+- ``attend``            — training/prefill over full sequences; uses
+                          memory-efficient KV-chunked online softmax above
+                          ``CHUNK_THRESHOLD`` so 32k-token prefill never
+                          materializes an S×S score matrix;
+- ``attend`` w/ memory  — cross-attention (whisper decoder);
+- ``decode_attend``     — single-token decode against a KV cache.
+
+The optional Pallas flash kernel (:mod:`repro.kernels.flash_attention`)
+is a drop-in for the chunked path on real TPUs; the pure-jnp path here is
+the shardable XLA reference the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+from .rope import apply_rope
+
+__all__ = [
+    "gqa_init",
+    "gqa_attend",
+    "gqa_prefill",
+    "gqa_decode",
+    "mla_init",
+    "mla_attend",
+    "mla_decode",
+    "sdpa",
+]
+
+CHUNK_THRESHOLD = 4096
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+NEG_INF = -1e30
+
+# roofline probes force the direct (non-scanned) path so XLA's cost
+# analysis sees every attention FLOP (scan bodies are counted once);
+# memory is irrelevant there (abstract lowering only).
+FORCE_DIRECT = False
+
+
+# --------------------------------------------------------------------------
+# scaled dot-product attention (shared math)
+# --------------------------------------------------------------------------
+
+
+def _direct_sdpa(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool, q_offset: int | jax.Array
+) -> jax.Array:
+    """q: (B,S,Hkv,G,h); k/v: (B,T,Hkv,h) → (B,S,Hkv,G,h)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bsngh,btnh->bnsgt", q, k).astype(jnp.float32) * scale
+    if causal:
+        s, t = q.shape[1], k.shape[1]
+        qpos = jnp.arange(s) + q_offset
+        mask = qpos[:, None] >= jnp.arange(t)[None, :]
+        logits = jnp.where(mask[None, None, :, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bnsgt,btnh->bsngh", probs, v)
+
+
+def _chunked_sdpa(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool
+) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks per Q chunk.
+
+    Never materializes more than (B, Hkv, G, Q_CHUNK, KV_CHUNK) logits.
+    Fully-masked upper blocks are still computed then masked (XLA cannot
+    express the ragged skip; the Pallas kernel does skip them on TPU —
+    see EXPERIMENTS.md §Perf).
+    """
+    b, s, n, g, h = q.shape
+    t = k.shape[1]
+
+    def _divisor_chunk(length: int, target: int) -> int:
+        c = min(target, length)
+        while length % c:  # largest divisor ≤ target (handles prefixed
+            c -= 1  # sequences like VLM patch+token lengths)
+        return c
+
+    qc = _divisor_chunk(s, Q_CHUNK)
+    kc = _divisor_chunk(t, KV_CHUNK)
+    scale = h**-0.5
+    nq, nk = s // qc, t // kc
+
+    qr = q.reshape(b, nq, qc, n, g, h)
+    kr = k.reshape(b, nk, kc, n, h)
+    vr = v.reshape(b, nk, kc, n, h)
+
+    def q_block(carry, qi):
+        qb = qr[:, qi]  # (b, qc, n, g, h)
+
+        def kv_block(acc, ki):
+            m_prev, l_prev, o_prev = acc
+            kb, vb = kr[:, ki], vr[:, ki]
+            logits = (
+                jnp.einsum("bsngh,btnh->bnsgt", qb, kb).astype(jnp.float32)
+                * scale
+            )
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                logits = jnp.where(mask[None, None, :, None, :], logits, NEG_INF)
+            m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            o_new = o_prev * corr[..., None] + jnp.einsum(
+                "bnsgt,btnh->bnsgh", p.astype(qb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        init = (
+            jnp.full((b, n, qc, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, n, qc, g), jnp.float32),
+            jnp.zeros((b, n, qc, g, h), jnp.float32),
+        )
+        (m, l, o), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return carry, out.transpose(0, 2, 1, 3, 4)  # (b, qc, n, g, h)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # blocks: (nq, b, qc, n, g, h) → (b, s, n, g, h)
+    return blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, n, g, h)
+
+
+def sdpa(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+) -> jax.Array:
+    """Grouped-query attention core; picks direct vs chunked by length."""
+    if not FORCE_DIRECT and q.shape[1] >= CHUNK_THRESHOLD and q.shape[1] == k.shape[1]:
+        return _chunked_sdpa(q, k, v, causal)
+    return _direct_sdpa(q, k, v, causal, q_offset)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+
+def gqa_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    h = cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (cfg.d_model, cfg.n_heads * h), cfg.jnp_dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(kk, (cfg.d_model, cfg.n_kv_heads * h), cfg.jnp_dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(kv, (cfg.d_model, cfg.n_kv_heads * h), cfg.jnp_dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ko, (cfg.n_heads * h, cfg.d_model), cfg.jnp_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(h, cfg.jnp_dtype)
+        p["k_norm"] = rmsnorm_init(h, cfg.jnp_dtype)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    b, s, _ = x.shape
+    h = cfg.head_dim_
+    g = cfg.n_heads // cfg.n_kv_heads
+    q = dense(p["wq"], x, "bsd,df->bsf").reshape(b, s, cfg.n_kv_heads, g, h)
+    k = dense(p["wk"], x, "bsd,df->bsf").reshape(b, s, cfg.n_kv_heads, h)
+    v = dense(p["wv"], x, "bsd,df->bsf").reshape(b, s, cfg.n_kv_heads, h)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q.reshape(b, s, cfg.n_heads, h), positions, cfg.rope_theta)
+    q = q.reshape(b, s, cfg.n_kv_heads, g, h)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    memory: jax.Array | None = None,
+    memory_positions: jax.Array | None = None,
+) -> jax.Array:
+    """Full-sequence attention (training / encoder / cross-attention)."""
+    b, s, _ = x.shape
+    h = cfg.head_dim_
+    g = cfg.n_heads // cfg.n_kv_heads
+    if memory is None:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    else:  # cross-attention: keys/values from encoder memory
+        t = memory.shape[1]
+        q = dense(p["wq"], x, "bsd,df->bsf").reshape(b, s, cfg.n_kv_heads, g, h)
+        k = dense(p["wk"], memory, "bsd,df->bsf").reshape(b, t, cfg.n_kv_heads, h)
+        v = dense(p["wv"], memory, "bsd,df->bsf").reshape(b, t, cfg.n_kv_heads, h)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+            k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+        q = apply_rope(q.reshape(b, s, cfg.n_heads, h), positions, cfg.rope_theta)
+        q = q.reshape(b, s, cfg.n_kv_heads, g, h)
+        mpos = (
+            memory_positions
+            if memory_positions is not None
+            else jnp.arange(t)[None, :].repeat(b, 0)
+        )
+        k = apply_rope(k, mpos, cfg.rope_theta)
+        causal = False
+    out = sdpa(q, k, v, causal=causal)
+    out = out.reshape(b, s, cfg.n_heads * h)
+    return dense(p["wo"], out, "bsf,fd->bsd")
+
+
+def gqa_prefill(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Prefill: full causal attention, returns output + KV cache."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = sdpa(q, k, v, causal=True)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim_)
+    return dense(p["wo"], out, "bsf,fd->bsd"), {"k": k, "v": v}
+
+
+def gqa_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """One-token decode; ``cache['k'/'v']``: (B, S_max, Hkv, h); ``pos``:
+    (B,) current write index (tokens beyond it are masked out)."""
+    b = x.shape[0]
+    h = cfg.head_dim_
+    g = cfg.n_heads // cfg.n_kv_heads
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    # masked (elementwise) cache write instead of dynamic_update_slice:
+    # purely local under *any* cache sharding — in particular the
+    # sequence-sharded layout, where a dynamic slice across the sharded S
+    # axis would make GSPMD rematerialize the whole cache per layer
+    # (§Perf #3: 21× KV bytes, 2.7 s collective term before this)
+    s_iota = jnp.arange(cache["k"].shape[1])[None, :, None, None]
+    at_pos = s_iota == pos[:, None, None, None]
+    k = jnp.where(at_pos, k_new.astype(cache["k"].dtype), cache["k"])
+    v = jnp.where(at_pos, v_new.astype(cache["v"].dtype), cache["v"])
+    scale = h**-0.5
+    logits = jnp.einsum("bsngh,btnh->bnsgt", q, k).astype(jnp.float32) * scale
+    t = k.shape[1]
+    valid = jnp.arange(t)[None, :] <= pos[:, None]  # (B, T)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bnsgt,btnh->bsngh", probs, v)
+    out = out.reshape(b, 1, cfg.n_heads * h)
+    return dense(p["wo"], out, "bsf,fd->bsd"), {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank Q/KV compression with decoupled RoPE.
+# The KV cache stores only (c_kv, k_rope) — the memory win MLA exists for.
+# --------------------------------------------------------------------------
+
+
+def mla_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    assert m is not None
+    dt = cfg.jnp_dtype
+    keys = jax.random.split(key, 6)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(keys[0], (cfg.d_model, m.q_lora_rank), dt),
+        "q_a_norm": rmsnorm_init(m.q_lora_rank, dt),
+        "wq_b": dense_init(keys[1], (m.q_lora_rank, cfg.n_heads * qk_head), dt),
+        "wkv_a": dense_init(
+            keys[2], (cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim), dt
+        ),
+        "kv_a_norm": rmsnorm_init(m.kv_lora_rank, dt),
+        "wkv_b": dense_init(
+            keys[3],
+            (m.kv_lora_rank, cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)),
+            dt,
+        ),
+        "wo": dense_init(keys[4], (cfg.n_heads * m.v_head_dim, cfg.d_model), dt),
+    }
+
+
+def _mla_qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    m = cfg.mla
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    q = dense(p["wq_b"], rmsnorm(p["q_a_norm"], dense(p["wq_a"], x, "bsd,dr->bsr")),
+              "bsr,rf->bsf").reshape(b, s, nh, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv_a = dense(p["wkv_a"], x, "bsd,dr->bsr")
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_a_norm"], c_kv)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend_from_cache(
+    p: dict, cfg: ModelConfig, q_nope, q_rope, c_kv, k_rope, causal, q_offset=0,
+    valid: jax.Array | None = None,
+):
+    """Attention with keys/values expanded from the compressed cache."""
+    m = cfg.mla
+    b, t = c_kv.shape[:2]
+    nh = cfg.n_heads
+    kv = dense(p["wkv_b"], c_kv, "bsr,rf->bsf").reshape(
+        b, t, nh, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    logits = (
+        jnp.einsum("bsnh,btnh->bnst", q_nope, k_nope)
+        + jnp.einsum("bsnh,bth->bnst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    s = q_nope.shape[1]
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        mask = qpos[:, None] >= jnp.arange(t)[None, :]
+        logits = jnp.where(mask[None, None, :, :], logits, NEG_INF)
+    if valid is not None:
+        logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q_nope.dtype)
+    out = jnp.einsum("bnst,btnh->bsnh", probs, v)
+    return dense(p["wo"], out.reshape(b, s, nh * m.v_head_dim), "bsf,fd->bsd")
+
+
+def mla_attend(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> jax.Array:
+    """Training/prefill MLA (full sequence).  Note: for very long sequences
+    this materializes (B,H,S,S) logits; MLA archs skip long_500k
+    (DESIGN.md §4), and 32k prefill is chunked along queries by remat."""
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    return _mla_attend_from_cache(p, cfg, q_nope, q_rope, c_kv, k_rope, True)
+
+
+def mla_prefill(
+    p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> tuple[jax.Array, dict]:
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    out = _mla_attend_from_cache(p, cfg, q_nope, q_rope, c_kv, k_rope, True)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: dict, pos: jax.Array
+) -> tuple[jax.Array, dict]:
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(p, cfg, x, pos[:, None])
+    # masked write (see gqa_decode): local under sequence-sharded caches
+    s_iota = jnp.arange(cache["c_kv"].shape[1])[None, :, None]
+    at_pos = s_iota == pos[:, None, None]
+    c_kv = jnp.where(at_pos, c_new.astype(cache["c_kv"].dtype), cache["c_kv"])
+    k_rope = jnp.where(
+        at_pos, kr_new.astype(cache["k_rope"].dtype), cache["k_rope"]
+    )
+    t = c_kv.shape[1]
+    valid = jnp.arange(t)[None, :] <= pos[:, None]
+    out = _mla_attend_from_cache(
+        p, cfg, q_nope, q_rope, c_kv, k_rope, causal=False, valid=valid
+    )
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

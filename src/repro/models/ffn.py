@@ -1,0 +1,132 @@
+"""Feed-forward layers: SwiGLU and mixture-of-experts.
+
+MoE follows the DeepSeek/Qwen3 recipe: softmax router, top-k routed
+experts (+ optional always-on shared experts), Switch-style aux
+load-balance loss.  Dispatch is capacity-based scatter/gather (GShard
+lineage): tokens are scattered into an ``(E, C, d)`` buffer, experts run
+as one batched matmul over the expert axis, and outputs gather back with
+combine weights.  Compute therefore scales with ``top_k``·``capacity
+factor`` — not with E — and sharding the expert axis on the ``model``
+mesh axis gives expert parallelism (XLA inserts the all-to-alls).
+
+Serving-time replica balancing of experts is in
+:mod:`repro.serve.moe_balance` (the paper's WF applied on device).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense, dense_init
+from repro.parallel.constrain import shard
+
+__all__ = ["swiglu_init", "swiglu", "moe_init", "moe_apply"]
+
+
+def swiglu_init(key: jax.Array, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d, d_ff), dtype),
+        "wi_up": dense_init(k2, (d, d_ff), dtype),
+        "wo": dense_init(k3, (d_ff, d), dtype),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(dense(p["wi_gate"], x, "bsd,df->bsf"))
+    u = dense(p["wi_up"], x, "bsd,df->bsf")
+    return dense(p["wo"], g * u, "bsf,fd->bsd")
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    dt = cfg.jnp_dtype
+    kr, ke, ks = jax.random.split(key, 3)
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    p = {
+        "router": dense_init(kr, (d, e), jnp.float32),  # fp32 router
+        "experts": {
+            "wi_gate": dense_init(ke, (e, d, f), dt)["w"],
+            "wi_up": dense_init(jax.random.fold_in(ke, 1), (e, d, f), dt)["w"],
+            "wo": dense_init(jax.random.fold_in(ke, 2), (e, f, d), dt)["w"],
+        },
+    }
+    if m.n_shared:
+        p["shared"] = swiglu_init(ks, d, f * m.n_shared, dt)
+    return p
+
+
+def _positions_in_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Arrival rank of each routed assignment within its expert.
+
+    Sort assignments by expert id (stable), subtract each expert run's
+    start offset, unsort.  O(NK log NK) integer work — no (N, E) one-hot.
+    """
+    nk = flat_e.shape[0]
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    run_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    pos_sorted = jnp.arange(nk) - run_start[sorted_e]
+    return jnp.zeros((nk,), jnp.int32).at[sort_idx].set(pos_sorted.astype(jnp.int32))
+
+
+def moe_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, *, no_drop: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss).
+
+    ``no_drop=True`` sizes expert buffers so no token can overflow —
+    used on the decode path where dropping a token's expert output would
+    corrupt generation (buffers are (E, n, d) with small decode n).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    e, k = m.n_experts, m.top_k
+    if no_drop:
+        cap = n
+    else:
+        cap = max(1, int(n * k / e * m.capacity_factor))
+
+    logits = dense(p["router"], x.astype(jnp.float32), "bsd,de->bse")
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (B,S,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    x_flat = x.reshape(n, d)
+    flat_e = top_i.reshape(n * k)
+    flat_w = top_w.reshape(n * k)
+    pos = _positions_in_expert(flat_e, e)
+    keep = pos < cap
+    slot = jnp.where(keep, pos, 0)
+
+    # dispatch: (E, C, d) expert buffers (dropped tokens contribute zero)
+    x_rep = jnp.repeat(x_flat, k, axis=0)  # (N·K, d)
+    contrib = x_rep * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e, cap, d), x.dtype).at[flat_e, slot].add(contrib)
+    buf = shard(buf, "model", None, None)  # EP: expert axis on `model`
+
+    # expert FFN as one batched matmul over the expert axis
+    ex = p["experts"]
+    g = jnp.einsum("ecd,edf->ecf", buf, ex["wi_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, ex["wi_up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, ex["wo"])
+    out_buf = shard(out_buf, "model", None, None)
+
+    # combine: gather back and weight
+    gathered = out_buf[flat_e, slot]  # (N·K, d)
+    gathered = gathered * (flat_w * keep).astype(x.dtype)[:, None]
+    y = gathered.reshape(n, k, d).sum(axis=1).reshape(b, s, d)
+
+    if m.n_shared:
+        y = y + swiglu(p["shared"], x)
+
+    # Switch-style aux loss: E · Σ_e fraction_e · mean_prob_e
+    ones = jnp.ones_like(flat_e, dtype=jnp.float32)
+    frac = jax.ops.segment_sum(ones, flat_e, num_segments=e) / (n * k)
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_prob) * m.router_aux_coef
+    return y, aux

@@ -1,0 +1,74 @@
+"""Basic layers: initializers, norms, embeddings, linear projections.
+
+Everything is functional: ``init_*`` builds a param pytree (plain dicts of
+jnp arrays), ``*_apply`` consumes it.  Params are created in the config's
+dtype; norm/softmax math runs in fp32 and casts back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "embed_init",
+    "embed",
+    "unembed",
+]
+
+
+def dense_init(
+    key: jax.Array,
+    shape: tuple[int, ...],
+    dtype,
+    *,
+    scale: float | None = None,
+    bias: bool = False,
+) -> dict:
+    """Variance-scaled normal init; shape (..., fan_in, fan_out)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = (scale if scale is not None else 1.0) / (fan_in**0.5)
+    p = {"w": (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros(shape[:-2] + shape[-1:], dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array, spec: str) -> jax.Array:
+    """einsum projection; ``spec`` like 'bsd,df->bsf'."""
+    y = jnp.einsum(spec, x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(dt)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Project back to vocab logits (fp32 for a stable softmax/loss);
+    vocab stays sharded on `model` under an ambient mesh."""
+    from repro.parallel.constrain import shard
+
+    logits = jnp.einsum("bsd,vd->bsv", x, p["table"]).astype(jnp.float32)
+    return shard(logits, "dp", None, "model")

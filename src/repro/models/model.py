@@ -1,0 +1,594 @@
+"""Model assembly: init / train-forward / prefill / decode for all families.
+
+Layers are stacked along a leading axis and driven by ``jax.lax.scan``
+(compact HLO → fast multi-device compile; per-layer remat).  Each family
+exposes the same four entry points consumed by the train/serve steps:
+
+    init_params(rng, cfg)                       -> params
+    forward_train(params, cfg, batch)           -> (logits, aux_loss)
+    prefill(params, cfg, batch)                 -> (logits, cache)
+    decode_step(params, cfg, tokens, cache)     -> (logits, cache)
+
+Batch layout: ``tokens`` (B,S) int32; optional ``frames`` (B,T,d) for
+whisper (stub conv frontend output) and ``patches`` (B,P,d) for llava
+(stub vision tower output).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    gqa_attend,
+    gqa_decode,
+    gqa_init,
+    gqa_prefill,
+    mla_attend,
+    mla_decode,
+    mla_init,
+    mla_prefill,
+)
+from .config import ModelConfig
+from .ffn import moe_apply, moe_init, swiglu, swiglu_init
+from .layers import embed, embed_init, rmsnorm, rmsnorm_init, unembed
+from .ssm import mamba2_apply, mamba2_decode, mamba2_init, mamba2_init_state
+from repro.parallel.constrain import shard
+
+Params = Any
+Cache = Any
+
+
+def _maybe_scan(body, carry, xs, unroll: bool):
+    """lax.scan, or a python-unrolled equivalent.
+
+    Unrolling exists for the roofline probes: XLA's cost analysis counts a
+    ``while`` body once regardless of trip count, so FLOP/collective
+    extraction lowers shallow *unrolled* configs and extrapolates
+    (benchmarks/roofline.py).  Functional behavior is identical.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# =========================================================================
+# per-layer init / apply
+# =========================================================================
+
+
+def _layer_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    """One decoder layer of the config's family (not zamba2's shared block)."""
+    dt = cfg.jnp_dtype
+    k_att, k_ffn = jax.random.split(key)
+    p: dict = {"norm1": rmsnorm_init(cfg.d_model, dt)}
+    if cfg.block_pattern in ("mamba2", "zamba2"):
+        p["mamba"] = mamba2_init(k_att, cfg)
+        return p
+    if cfg.block_pattern == "mla_moe":
+        p["attn"] = mla_init(k_att, cfg)
+    else:
+        p["attn"] = gqa_init(k_att, cfg)
+    p["norm2"] = rmsnorm_init(cfg.d_model, dt)
+    if cfg.moe.n_experts:
+        p["ffn"] = moe_init(k_ffn, cfg)
+    else:
+        p["ffn"] = swiglu_init(k_ffn, cfg.d_model, cfg.d_ff, dt)
+    if cfg.block_pattern == "encdec":  # decoder layer: add cross-attention
+        p["norm_x"] = rmsnorm_init(cfg.d_model, dt)
+        p["cross"] = gqa_init(jax.random.fold_in(k_att, 7), cfg)
+    return p
+
+
+def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, no_drop: bool = False):
+    if cfg.moe.n_experts:
+        if cfg.moe.dispatch == "shard_map" and not no_drop:
+            mesh = jax.sharding.get_abstract_mesh()
+            if (
+                mesh is not None
+                and "model" in mesh.axis_names
+                and cfg.moe.n_experts % mesh.shape["model"] == 0
+            ):
+                from .moe_sharded import moe_apply_sharded
+
+                return moe_apply_sharded(p, cfg, x, mesh)
+        return moe_apply(p, cfg, x, no_drop=no_drop)
+    return swiglu(p, x), jnp.zeros((), jnp.float32)
+
+
+def _layer_train(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    memory: jax.Array | None = None,
+):
+    """Full-sequence layer forward; returns (x, aux)."""
+    if cfg.block_pattern in ("mamba2", "zamba2"):
+        h, _ = mamba2_apply(p["mamba"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps))
+        return x + h, jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.block_pattern == "mla_moe":
+        h = mla_attend(p["attn"], cfg, h, positions)
+    else:
+        h = gqa_attend(p["attn"], cfg, h, positions, causal=True)
+    x = x + h
+    if cfg.block_pattern == "encdec" and memory is not None:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        h = gqa_attend(p["cross"], cfg, h, positions, memory=memory)
+        x = x + h
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    h, aux = _ffn_apply(p["ffn"], cfg, h)
+    return x + h, aux
+
+
+def _layer_prefill(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    memory: jax.Array | None = None,
+):
+    """Like _layer_train but returns the layer's decode cache."""
+    if cfg.block_pattern in ("mamba2", "zamba2"):
+        h, state = mamba2_apply(
+            p["mamba"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps)
+        )
+        return x + h, {"conv": state[0], "ssm": state[1]}
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.block_pattern == "mla_moe":
+        h, cache = mla_prefill(p["attn"], cfg, h, positions)
+    else:
+        h, cache = gqa_prefill(p["attn"], cfg, h, positions)
+    x = x + h
+    if cfg.block_pattern == "encdec" and memory is not None:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        h = gqa_attend(p["cross"], cfg, h, positions, memory=memory)
+        x = x + h
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    h, _ = _ffn_apply(p["ffn"], cfg, h)
+    return x + h, cache
+
+
+def _layer_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    memory: jax.Array | None = None,
+):
+    if cfg.block_pattern in ("mamba2", "zamba2"):
+        h, state = mamba2_decode(
+            p["mamba"], cfg, rmsnorm(p["norm1"], x, cfg.norm_eps),
+            (cache["conv"], cache["ssm"]),
+        )
+        return x + h, {"conv": state[0], "ssm": state[1]}
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if cfg.block_pattern == "mla_moe":
+        h, cache = mla_decode(p["attn"], cfg, h, cache, pos)
+    else:
+        h, cache = gqa_decode(p["attn"], cfg, h, cache, pos)
+    x = x + h
+    if cfg.block_pattern == "encdec" and memory is not None:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        h = gqa_attend(
+            p["cross"], cfg, h, pos[:, None], memory=memory
+        )
+        x = x + h
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    h, _ = _ffn_apply(p["ffn"], cfg, h, no_drop=True)
+    return x + h, cache
+
+
+# =========================================================================
+# parameter init
+# =========================================================================
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    params: dict = {
+        "embed": embed_init(keys[1], cfg.vocab, cfg.d_model, cfg.jnp_dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+    }
+    if cfg.block_pattern == "zamba2":
+        # one shared attention+FFN block reused every hybrid_period layers
+        shared_cfg = cfg.scaled(block_pattern="dense", moe=cfg.moe)
+        params["shared_attn"] = {
+            "norm1": rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+            "attn": gqa_init(keys[2], shared_cfg),
+            "norm2": rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+            "ffn": swiglu_init(keys[3], cfg.d_model, cfg.d_ff, cfg.jnp_dtype),
+        }
+    if cfg.block_pattern == "encdec":
+        enc_cfg = cfg.scaled(block_pattern="dense")
+        enc_keys = jax.random.split(keys[4], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _layer_init(k, enc_cfg))(enc_keys),
+            "final_norm": rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+        }
+    if cfg.mtp_depth:
+        # DeepSeek-V3 multi-token prediction: one extra block + projection
+        mtp_cfg = cfg
+        params["mtp"] = {
+            "proj": {
+                "w": (
+                    jax.random.normal(
+                        keys[5], (2 * cfg.d_model, cfg.d_model), jnp.float32
+                    )
+                    * 0.02
+                ).astype(cfg.jnp_dtype)
+            },
+            "block": _layer_init(keys[6], mtp_cfg),
+            "norm": rmsnorm_init(cfg.d_model, cfg.jnp_dtype),
+        }
+    return params
+
+
+# =========================================================================
+# stacks (scan over layers)
+# =========================================================================
+
+
+def _scan_train(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    memory: jax.Array | None = None,
+    *,
+    remat: bool = True,
+    unroll: bool = False,
+):
+    if cfg.block_pattern == "zamba2":
+        return _zamba_train(params, cfg, x, positions, remat=remat, unroll=unroll)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a = _layer_train(layer_p, cfg, h, positions, memory)
+        return (shard(h, "dp", None, None), aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = _maybe_scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"], unroll
+    )
+    return x, aux
+
+
+def _zamba_train(params, cfg, x, positions, *, remat=True, unroll=False):
+    period = cfg.hybrid_period
+    n_super = cfg.n_layers // period
+    assert n_super * period == cfg.n_layers, "n_layers must divide hybrid_period"
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), params["layers"]
+    )
+    shared = params["shared_attn"]
+    dense_cfg = cfg.scaled(block_pattern="dense")
+
+    def super_body(carry, super_p):
+        h = carry
+        # shared attention + FFN block (same params every invocation)
+        a = rmsnorm(shared["norm1"], h, cfg.norm_eps)
+        a = gqa_attend(shared["attn"], dense_cfg, a, positions, causal=True)
+        h = h + a
+        a = rmsnorm(shared["norm2"], h, cfg.norm_eps)
+        h = h + swiglu(shared["ffn"], a)
+
+        def inner(c, lp):
+            c, _ = _layer_train(lp, cfg, c, positions)
+            return shard(c, "dp", None, None), None
+
+        h, _ = _maybe_scan(inner, h, super_p, unroll)
+        return shard(h, "dp", None, None), None
+
+    body_fn = jax.checkpoint(super_body) if remat else super_body
+    x, _ = _maybe_scan(body_fn, x, stacked, unroll)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# =========================================================================
+# public entry points
+# =========================================================================
+
+
+def _encode(
+    params: Params, cfg: ModelConfig, frames: jax.Array, unroll: bool = False
+) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, T, d)."""
+    enc_cfg = cfg.scaled(block_pattern="dense")
+    b, t, _ = frames.shape
+    positions = jnp.arange(t)[None, :].repeat(b, 0)
+    x = frames
+
+    def body(h, layer_p):
+        a = rmsnorm(layer_p["norm1"], h, cfg.norm_eps)
+        a = gqa_attend(layer_p["attn"], enc_cfg, a, positions, causal=False)
+        h = h + a
+        a = rmsnorm(layer_p["norm2"], h, cfg.norm_eps)
+        h = h + swiglu(layer_p["ffn"], a)
+        return shard(h, "dp", None, None), None
+
+    x, _ = _maybe_scan(jax.checkpoint(body), x, params["encoder"]["layers"], unroll)
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg, batch) -> tuple[jax.Array, jax.Array]:
+    """Token (+ prefix) embeddings and positions."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens)
+    if cfg.block_pattern == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :].repeat(b, 0)
+    return shard(x, "dp", None, None), positions
+
+
+def forward_train(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    remat: bool = True,
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """Full forward; returns (logits (B,S,V), aux_loss, mtp_logits|None).
+
+    For VLM the patch prefix is consumed and logits align to the token
+    suffix; for encdec the encoder runs on ``batch['frames']``; for
+    DeepSeek-style MTP the extra head predicts token t+2.
+    """
+    memory = None
+    if cfg.block_pattern == "encdec":
+        memory = _encode(params, cfg, batch["frames"], unroll)
+    x, positions = _embed_inputs(params, cfg, batch)
+    x, aux = _scan_train(
+        params, cfg, x, positions, memory, remat=remat, unroll=unroll
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.block_pattern == "vlm" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1]:, :]
+    logits = unembed(params["embed"], x)
+
+    if cfg.mtp_depth and "tokens" in batch:
+        # MTP: predict token t+2 from (hidden_t, embed_{t+1})
+        emb_next = embed(params["embed"], batch["tokens"])
+        h = jnp.concatenate([x[:, :-1], emb_next[:, 1:]], axis=-1)
+        h = jnp.einsum("bsd,df->bsf", h, params["mtp"]["proj"]["w"])
+        h, _ = _layer_train(params["mtp"]["block"], cfg, h, positions[:, :-1])
+        h = rmsnorm(params["mtp"]["norm"], h, cfg.norm_eps)
+        mtp_logits = unembed(params["embed"], h)
+        return logits, aux, mtp_logits
+    return logits, aux, None
+
+
+def _pad_time(tree: Any, keys: tuple[str, ...], extra: int) -> Any:
+    """Pad the time axis (axis 2, after the layer-stack axis) of the named
+    cache leaves with ``extra`` zero positions (decode headroom)."""
+    if extra <= 0:
+        return tree
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {
+                k: (
+                    jnp.pad(v, [(0, 0), (0, 0), (0, extra)] + [(0, 0)] * (v.ndim - 3))
+                    if k in keys and hasattr(v, "ndim")
+                    else walk(v)
+                )
+                for k, v in node.items()
+            }
+        return node
+
+    return walk(tree)
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    max_len: int | None = None,
+    unroll: bool = False,
+) -> tuple[jax.Array, Cache]:
+    """Process the prompt; returns (last-position logits, decode cache).
+
+    ``max_len`` reserves cache headroom for subsequent decode steps
+    (default: prompt length only — enough for lowering, not generation).
+    """
+    memory = None
+    if cfg.block_pattern == "encdec":
+        memory = _encode(params, cfg, batch["frames"], unroll)
+    x, positions = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    extra = (max_len - s) if max_len else 0
+
+    if cfg.block_pattern == "zamba2":
+        cache = _zamba_prefill_cache(params, cfg, x, positions, unroll)
+        logits = cache.pop("logits")
+        cache["layers"]["attn"] = _pad_time(
+            cache["layers"]["attn"], ("k", "v"), extra
+        )
+        return logits, cache
+
+    def body(h, layer_p):
+        h, layer_cache = _layer_prefill(layer_p, cfg, h, positions, memory)
+        return shard(h, "dp", None, None), layer_cache
+
+    x, caches = _maybe_scan(body, x, params["layers"], unroll)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1:, :])
+    caches = _pad_time(caches, ("k", "v", "c_kv", "k_rope"), extra)
+    cache: dict = {"layers": caches, "pos": jnp.full((b,), s, jnp.int32)}
+    if memory is not None:
+        cache["memory"] = memory
+    return logits, cache
+
+
+def _zamba_prefill_cache(params, cfg, x, positions, unroll=False):
+    period = cfg.hybrid_period
+    n_super = cfg.n_layers // period
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), params["layers"]
+    )
+    shared = params["shared_attn"]
+    dense_cfg = cfg.scaled(block_pattern="dense")
+    b, s, _ = x.shape
+
+    def super_body(h, super_p):
+        a = rmsnorm(shared["norm1"], h, cfg.norm_eps)
+        a, attn_cache = gqa_prefill(shared["attn"], dense_cfg, a, positions)
+        h = h + a
+        a = rmsnorm(shared["norm2"], h, cfg.norm_eps)
+        h = h + swiglu(shared["ffn"], a)
+
+        def inner(c, lp):
+            c, st = _layer_prefill(lp, cfg, c, positions)
+            return shard(c, "dp", None, None), st
+
+        h, states = _maybe_scan(inner, h, super_p, unroll)
+        return shard(h, "dp", None, None), {"attn": attn_cache, "mamba": states}
+
+    x, caches = _maybe_scan(super_body, x, stacked, unroll)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1:, :])
+    return {
+        "logits": logits,
+        "layers": caches,
+        "pos": jnp.full((b,), s, jnp.int32),
+    }
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: Cache,
+    *,
+    unroll: bool = False,
+) -> tuple[jax.Array, Cache]:
+    """One decode step; ``tokens`` (B, 1); cache from :func:`prefill` or
+    :func:`init_decode_cache`."""
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens)
+    memory = cache.get("memory")
+
+    if cfg.block_pattern == "zamba2":
+        return _zamba_decode(params, cfg, x, cache, unroll)
+
+    def body(h, inp):
+        layer_p, layer_cache = inp
+        h, new_cache = _layer_decode(layer_p, cfg, h, layer_cache, pos, memory)
+        return shard(h, "dp", None, None), new_cache
+
+    x, new_caches = _maybe_scan(
+        body, x, (params["layers"], cache["layers"]), unroll
+    )
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_caches
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def _zamba_decode(params, cfg, x, cache, unroll=False):
+    pos = cache["pos"]
+    shared = params["shared_attn"]
+    dense_cfg = cfg.scaled(block_pattern="dense")
+    period = cfg.hybrid_period
+    n_super = cfg.n_layers // period
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_super, period) + a.shape[1:]), params["layers"]
+    )
+
+    def super_body(h, inp):
+        super_p, sc = inp
+        a = rmsnorm(shared["norm1"], h, cfg.norm_eps)
+        a, attn_cache = gqa_decode(shared["attn"], dense_cfg, a, sc["attn"], pos)
+        h = h + a
+        a = rmsnorm(shared["norm2"], h, cfg.norm_eps)
+        h = h + swiglu(shared["ffn"], a)
+
+        def inner(c, lp_st):
+            lp, st = lp_st
+            c, new_st = _layer_decode(lp, cfg, c, st, pos)
+            return shard(c, "dp", None, None), new_st
+
+        h, states = _maybe_scan(inner, h, (super_p, sc["mamba"]), unroll)
+        return shard(h, "dp", None, None), {"attn": attn_cache, "mamba": states}
+
+    x, new_caches = _maybe_scan(super_body, x, (stacked, cache["layers"]), unroll)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {"layers": new_caches, "pos": pos + 1}
+
+
+def init_decode_cache(
+    params: Params, cfg: ModelConfig, batch: int, max_seq: int
+) -> Cache:
+    """Empty cache for decode-only lowering (``decode_*``/``long_*`` shapes).
+
+    ``pos`` starts at ``max_seq - 1`` to model a fully-populated context.
+    """
+    dt = cfg.jnp_dtype
+    h = cfg.head_dim_
+    l, b, s = cfg.n_layers, batch, max_seq
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    if cfg.block_pattern in ("dense", "moe", "vlm"):
+        layers = {
+            "k": jnp.zeros((l, b, s, cfg.n_kv_heads, h), dt),
+            "v": jnp.zeros((l, b, s, cfg.n_kv_heads, h), dt),
+        }
+        return {"layers": layers, "pos": pos}
+    if cfg.block_pattern == "mla_moe":
+        m = cfg.mla
+        layers = {
+            "c_kv": jnp.zeros((l, b, s, m.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((l, b, s, m.qk_rope_head_dim), dt),
+        }
+        return {"layers": layers, "pos": pos}
+    if cfg.block_pattern == "mamba2":
+        conv, ssm = mamba2_init_state(cfg, b, dt)
+        layers = {
+            "conv": jnp.zeros((l,) + conv.shape, dt),
+            "ssm": jnp.zeros((l,) + ssm.shape, jnp.float32),
+        }
+        return {"layers": layers, "pos": pos}
+    if cfg.block_pattern == "zamba2":
+        period = cfg.hybrid_period
+        n_super = cfg.n_layers // period
+        conv, ssm = mamba2_init_state(cfg, b, dt)
+        layers = {
+            "attn": {
+                "k": jnp.zeros((n_super, b, s, cfg.n_kv_heads, h), dt),
+                "v": jnp.zeros((n_super, b, s, cfg.n_kv_heads, h), dt),
+            },
+            "mamba": {
+                "conv": jnp.zeros((n_super, period) + conv.shape, dt),
+                "ssm": jnp.zeros((n_super, period) + ssm.shape, jnp.float32),
+            },
+        }
+        return {"layers": layers, "pos": pos}
+    if cfg.block_pattern == "encdec":
+        layers = {
+            "k": jnp.zeros((l, b, s, cfg.n_kv_heads, h), dt),
+            "v": jnp.zeros((l, b, s, cfg.n_kv_heads, h), dt),
+        }
+        memory = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), dt)
+        return {"layers": layers, "pos": pos, "memory": memory}
+    raise ValueError(cfg.block_pattern)

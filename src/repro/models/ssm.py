@@ -1,0 +1,221 @@
+"""Mamba2 (SSD — state-space duality) block, pure-jnp reference.
+
+Chunked SSD algorithm (Dao & Gu 2024, "ssd_minimal" lineage):
+within-chunk terms use the quadratic dual form; across chunks a scan
+carries the (heads, head_dim, state) recurrent state.  The Pallas kernel
+in :mod:`repro.kernels.ssd_scan` mirrors the chunk computation with VMEM
+tiling; this module is its oracle and the shardable XLA path the dry-run
+lowers (O(S) memory and compute in sequence length — the sub-quadratic
+path that makes ``long_500k`` runnable).
+
+Single-token decode keeps (conv_state, ssm_state) and is O(1) per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "mamba2_init_state", "ssd_chunked"]
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    assert s is not None
+    d_in = s.expand * cfg.d_model
+    nh = s.n_heads or d_in // s.head_dim
+    return d_in, nh, s.head_dim, s.state_dim
+
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d_in, nh, hd, st = _dims(cfg)
+    dt = cfg.jnp_dtype
+    conv_ch = d_in + 2 * st
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        # in_proj packs [z, x, B, C, dt]
+        "in_proj": dense_init(k1, (cfg.d_model, 2 * d_in + 2 * st + nh), dt),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_ch), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_g": jnp.ones((d_in,), dt),
+        "out_proj": dense_init(k3, (d_in, cfg.d_model), dt)["w"],
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = Σ_{j<t≤i} a[..., t]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — post-softplus
+    A: jax.Array,  # (H,) negative decay rates
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan; returns (y (B,S,H,P), final state (B,H,P,N))."""
+    b, s, nh, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, "sequence must divide the SSD chunk"
+    c = s // q
+    xd = (x * dt[..., None]).astype(jnp.float32)  # fold dt into inputs
+    da = (dt * A[None, None, :]).astype(jnp.float32)  # (B,S,H) ≤ 0
+
+    xc = xd.reshape(b, c, q, nh, p)
+    dac = da.reshape(b, c, q, nh)
+    bc = Bm.reshape(b, c, q, n).astype(jnp.float32)
+    cc = Cm.reshape(b, c, q, n).astype(jnp.float32)
+
+    # intra-chunk (quadratic dual form)
+    L = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B,C,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,C,Q,Q)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xc)
+
+    # chunk states: decay from position to chunk end
+    cum = jnp.cumsum(dac, axis=2)  # (B,C,Q,H)
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,C,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", bc, decay_end, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,C,H)
+
+    def step(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h_init = (
+        jnp.zeros((b, nh, p, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    h_last, h_prev = jax.lax.scan(
+        step,
+        h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B,C,H,P,N)
+
+    # inter-chunk contribution: decay from chunk start to position
+    decay_in = jnp.exp(cum)  # (B,C,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, decay_in, h_prev)
+
+    y = (y_diag + y_off).reshape(b, s, nh, p)
+    return y, h_last
+
+
+def _conv_causal(seq: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv; seq (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + seq.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def _split_proj(p: dict, cfg: ModelConfig, u: jax.Array):
+    d_in, nh, hd, st = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,df->bsf", u, p["in_proj"]["w"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * st], axis=-1)
+    return z, xbc, dt_raw
+
+
+def mamba2_apply(
+    p: dict,
+    cfg: ModelConfig,
+    u: jax.Array,
+    state: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence forward; returns (y, (conv_state, ssm_state))."""
+    s_cfg = cfg.ssm
+    d_in, nh, hd, st = _dims(cfg)
+    b, s, _ = u.shape
+    z, xbc, dt_raw = _split_proj(p, cfg, u)
+    conv_in = xbc
+    if state is not None:
+        conv_prefix = state[0]  # (B, W-1, C)
+        conv_full = jnp.concatenate([conv_prefix, conv_in], axis=1)
+        conv = _conv_causal(conv_full, p["conv_w"], p["conv_b"])[:, -s:, :]
+    else:
+        conv = _conv_causal(conv_in, p["conv_w"], p["conv_b"])
+    conv = jax.nn.silu(conv)
+    xpart, bpart, cpart = jnp.split(conv, [d_in, d_in + st], axis=-1)
+    x = xpart.reshape(b, s, nh, hd)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(p["A_log"])
+    h0 = state[1] if state is not None else None
+    y, h_last = ssd_chunked(x, dt, A, bpart, cpart, s_cfg.chunk, h0)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"g": p["norm_g"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    new_conv_state = (
+        jnp.concatenate([state[0] if state is not None else jnp.zeros(
+            (b, s_cfg.conv_width - 1, conv_in.shape[-1]), conv_in.dtype), conv_in], axis=1
+        )[:, -(s_cfg.conv_width - 1):, :]
+    )
+    return out, (new_conv_state, h_last)
+
+
+def mamba2_init_state(
+    cfg: ModelConfig, batch: int, dtype
+) -> tuple[jax.Array, jax.Array]:
+    s = cfg.ssm
+    d_in, nh, hd, st = _dims(cfg)
+    conv_ch = d_in + 2 * st
+    return (
+        jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        jnp.zeros((batch, nh, hd, st), jnp.float32),
+    )
+
+
+def mamba2_decode(
+    p: dict,
+    cfg: ModelConfig,
+    u: jax.Array,  # (B, 1, d)
+    state: tuple[jax.Array, jax.Array],
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """O(1) single-token step."""
+    s_cfg = cfg.ssm
+    d_in, nh, hd, st = _dims(cfg)
+    b = u.shape[0]
+    z, xbc, dt_raw = _split_proj(p, cfg, u)
+    conv_state, h = state
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # (B, W, C)
+    conv = (window * p["conv_w"][None, :, :]).sum(axis=1) + p["conv_b"]
+    conv = jax.nn.silu(conv)[:, None, :]
+    xpart, bpart, cpart = jnp.split(conv, [d_in, d_in + st], axis=-1)
+    x = xpart.reshape(b, nh, hd)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A[None, :])  # (B, H)
+    bm = bpart[:, 0].astype(jnp.float32)
+    cm = cpart[:, 0].astype(jnp.float32)
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    h_new = h * da[..., None, None] + jnp.einsum("bhp,bn->bhpn", xd, bm)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cm) + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"g": p["norm_g"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return out, (window[:, 1:, :], h_new)

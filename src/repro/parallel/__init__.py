@@ -1,0 +1,19 @@
+"""Distribution: mesh construction and sharding rules."""
+
+from .sharding import (
+    batch_sharding,
+    cache_sharding,
+    fsdp_axes,
+    param_sharding,
+    replicated,
+    serve_param_sharding,
+)
+
+__all__ = [
+    "batch_sharding",
+    "cache_sharding",
+    "fsdp_axes",
+    "param_sharding",
+    "replicated",
+    "serve_param_sharding",
+]

@@ -1,0 +1,218 @@
+"""Sharding rules: params (FSDP×TP×EP), batches, and decode caches.
+
+Mesh axes (launch/mesh.py): optional ``pod`` (data-parallel across pods),
+``data`` (FSDP/DP), ``model`` (TP/EP).  Rules are path-based with a
+divisibility fallback: a dimension is sharded on an axis only when its
+size divides the axis extent, otherwise it is replicated on that axis —
+so every assigned architecture (including awkward dims like mamba2-130m's
+conv channels) lowers on the same mesh without special cases.
+
+Summary (L = stacked-layer axis, fsdp = (pod, data) or (data,)):
+
+  embed.table        (V, D)        → ("model", fsdp)
+  attn wq/wk/wv      (L, D, H·h)   → (None, fsdp, "model")
+  attn wo            (L, H·h, D)   → (None, "model", fsdp)
+  mla wq_b/wkv_b     (L, r, H·x)   → (None, None, "model")
+  ffn wi_gate/wi_up  (L, D, F)     → (None, fsdp, "model")
+  ffn wo             (L, F, D)     → (None, "model", fsdp)
+  moe experts        (L, E, D, F)  → (None, "model", fsdp, None)   [EP]
+  mamba in/out proj  (L, D, F)     → (None, fsdp, "model")
+  everything else    replicate (norms, biases, scalars)
+
+Optimizer state shards identically to its parameter (ZeRO-style: the
+FSDP axis already splits both).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "fsdp_axes",
+    "param_sharding",
+    "batch_sharding",
+    "cache_sharding",
+    "replicated",
+]
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes: ('pod', 'data') if multi-pod else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, shape: tuple[int, ...], want: tuple) -> P:
+    """Drop axis assignments whose extent does not divide the dim size."""
+    out = []
+    for dim, axes in zip(shape, want):
+        if axes is not None and dim % _axis_size(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _param_spec(mesh: Mesh, path: str, shape: tuple[int, ...]) -> P:
+    fsdp = fsdp_axes(mesh)
+    nd = len(shape)
+
+    def with_layer(spec_tail: tuple) -> P:
+        """Prepend Nones for any leading stacked axes (layer / super-block)."""
+        lead = nd - len(spec_tail)
+        return _fit(mesh, shape, (None,) * lead + spec_tail)
+
+    if path.endswith("embed/table"):
+        return _fit(mesh, shape, ("model", fsdp))
+    # expert tensors: (L, E, D, F) / (L, E, F, D)
+    if "/experts/" in path:
+        return with_layer(("model", fsdp, None))
+    if path.endswith("router/w"):
+        return with_layer((fsdp, None))
+    # attention / mlp projections ending in a weight leaf
+    if path.endswith(("wq/w", "wk/w", "wv/w", "wq_b/w", "wkv_b/w",
+                      "wi_gate/w", "wi_up/w", "in_proj/w")):
+        return with_layer((fsdp, "model"))
+    if path.endswith(("wo/w", "out_proj")):
+        return with_layer(("model", fsdp))
+    if path.endswith(("wq_a/w", "wkv_a/w", "proj/w")):
+        return with_layer((fsdp, None))
+    if path.endswith(("wq/b", "wk/b", "wv/b", "wi_gate/b", "wi_up/b", "in_proj/b")):
+        return with_layer(("model",))
+    # norms / biases on d_model, conv weights, scalars per head: replicate
+    return P(*([None] * nd))
+
+
+def param_sharding(mesh: Mesh, params: Any) -> Any:
+    """NamedSharding tree aligned with a (shape-only or concrete) pytree."""
+
+    def leaf(path, x):
+        spec = _param_spec(mesh, _path_str(path), tuple(x.shape))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def serve_param_sharding(mesh: Mesh, params: Any) -> Any:
+    """Decode-time parameter sharding (§Perf hillclimb #3).
+
+    Training uses FSDP×TP: weights sharded on `data` are all-gathered on
+    use — amortized over a big batch, but at decode (a single token per
+    sequence) the per-step gather dominates everything (measured 2.7 s
+    collective term vs 1 ms compute on qwen2.5-32b decode_32k).
+
+    Serving therefore keeps weights *resident*: tensor-parallel on
+    `model`, replicated over the data axes — except MoE expert tensors,
+    whose expert axis shards over (data × model) combined (deepseek-v3's
+    1.3 TB of experts → ~5 GB/chip at 256-way EP) so nothing is gathered
+    per step there either.
+    """
+    dp = fsdp_axes(mesh)
+
+    def leaf(path, x):
+        name = _path_str(path)
+        shape = tuple(x.shape)
+        if "/experts/" in name:
+            # measured (EXPERIMENTS.md §Perf #3): 2-D EP (E over data×model)
+            # makes GSPMD replicate the no-drop dispatch buffers — 34×
+            # worse. Keep the train sharding for expert tensors.
+            nd = len(shape)
+            spec = _fit(mesh, shape, (None,) * (nd - 3) + ("model", dp, None))
+            return NamedSharding(mesh, spec)
+        spec = _param_spec(mesh, name, shape)
+        # drop the fsdp axes: weights stay resident, replicated over dp
+        cleaned = []
+        for axes in spec:
+            if axes is None or axes == "model":
+                cleaned.append(axes)
+            elif isinstance(axes, tuple):
+                kept = tuple(a for a in axes if a == "model")
+                cleaned.append(kept if kept else None)
+            else:  # a single dp axis name
+                cleaned.append(None)
+        return NamedSharding(mesh, _fit(mesh, shape, tuple(cleaned)))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_sharding(mesh: Mesh, batch: Any) -> Any:
+    """Batch dim on (pod, data) when divisible, else replicated."""
+    dp = fsdp_axes(mesh)
+
+    def leaf(x):
+        shape = tuple(x.shape)
+        want = (dp,) + (None,) * (len(shape) - 1)
+        return NamedSharding(mesh, _fit(mesh, shape, want))
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_sharding(mesh: Mesh, cache: Any) -> Any:
+    """Decode-cache sharding.
+
+    Leaves are (L, B, S, …): batch on the fsdp axes when divisible;
+    otherwise fall back to sequence sharding (long-context decode with
+    B=1 — sequence-parallel KV).  Trailing head axes go on "model" when
+    divisible.  ``pos`` and other small leaves replicate.
+    """
+    dp = fsdp_axes(mesh)
+
+    def leaf(path, x):
+        shape = tuple(x.shape)
+        name = _path_str(path)
+        if name.endswith("pos") or len(shape) < 3:
+            return NamedSharding(mesh, P())
+        if name.endswith("memory"):  # (B, T, D)
+            return NamedSharding(mesh, _fit(mesh, shape, (dp, None, None)))
+        if name.endswith(("conv", "ssm")):
+            # mamba2: (L, B, …); zamba2: (n_super, period, B, …)
+            b_axis = 2 if "/mamba/" in name else 1
+            want_s: list = [None] * len(shape)
+            want_s[b_axis] = dp
+            return NamedSharding(mesh, _fit(mesh, shape, tuple(want_s)))
+        # (L, B, S, heads?, hd?) — batch → dp, sequence → model.
+        # Sequence-parallel KV is the preferred decode layout (§Perf #3):
+        # with the *masked* cache write the update is purely local, the
+        # attention contraction over S psums only (B, heads) scalars, and
+        # it applies uniformly to every arch (heads/hd layouts force an
+        # all-reduce of 32k-length logits per layer — measured 1.5 s/step).
+        want: list = [None] * len(shape)
+        if shape[1] % _axis_size(mesh, dp) == 0:
+            want[1] = dp
+        elif shape[2] % mesh.shape["data"] == 0:
+            want[2] = "data"
+        if want[2] is None and shape[2] % mesh.shape["model"] == 0:
+            want[2] = "model"
+        else:  # fall back to heads/head_dim on `model`
+            for axis in (3, 4):
+                if len(shape) > axis and shape[axis] % mesh.shape["model"] == 0:
+                    want[axis] = "model"
+                    break
+        return NamedSharding(mesh, _fit(mesh, shape, tuple(want)))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)

@@ -1,0 +1,5 @@
+"""Cluster runtime: time-slotted simulator, events, metrics."""
+
+from .simulator import ClusterSimulator, ServerEvent, SimResult
+
+__all__ = ["ClusterSimulator", "ServerEvent", "SimResult"]

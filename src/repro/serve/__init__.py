@@ -1,0 +1,11 @@
+"""Serving: prefill/decode steps, continuous batching, WF-balanced MoE."""
+
+from .engine import ServeEngine, make_decode_step, make_prefill_step
+from .moe_balance import balance_expert_replicas
+
+__all__ = [
+    "ServeEngine",
+    "make_decode_step",
+    "make_prefill_step",
+    "balance_expert_replicas",
+]

@@ -1,0 +1,170 @@
+"""Serving engine: jitted prefill/decode steps + continuous batching.
+
+``ServeEngine`` keeps a fixed-capacity decode batch; requests join at
+free slots (their prompt prefilled into the shared cache at the slot's
+rows) and leave on EOS/length.  Request→replica routing for multi-replica
+deployments uses the paper's WF (each inference replica = a server; its
+queued tokens = busy time) via :class:`ReplicaRouter`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AssignmentProblem, TaskGroup, water_filling
+from repro.models import ModelConfig, decode_step, init_decode_cache, prefill
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine", "ReplicaRouter"]
+
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: int | None = None) -> Callable:
+    def step(params, batch):
+        return prefill(params, cfg, batch, max_len=max_len)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def step(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache)
+
+    return step
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)  # new only
+    done: bool = False
+    _last: int = -1  # last token fed to the model (prompt tail, then new)
+
+
+class ServeEngine:
+    """Single-replica continuous batching over a shared decode cache."""
+
+    def __init__(
+        self,
+        params: Any,
+        cfg: ModelConfig,
+        *,
+        batch_slots: int = 8,
+        max_len: int = 512,
+        eos_token: int = 0,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.slots: list[Request | None] = [None] * batch_slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.cache = init_decode_cache(params, cfg, batch_slots, max_len)
+        self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+        self._pos = np.zeros(batch_slots, np.int32)
+        self._pending: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self._pending:
+                continue
+            req = self._pending.pop(0)
+            # prefill the prompt into this slot's cache rows, token by token
+            # (batched prompt prefill for a single slot of a shared cache)
+            toks = req.prompt
+            for t in toks[:-1]:
+                self._step_single(i, int(t))
+            req._last = int(toks[-1])
+            self.slots[i] = req
+
+    def _step_single(self, slot: int, token: int) -> int:
+        """Advance one slot by one token (other slots fed a pad token —
+        masked out of their caches by per-slot positions)."""
+        tokens = np.zeros((len(self.slots), 1), np.int32)
+        tokens[slot, 0] = token
+        logits, cache = self._decode(
+            self.params, jnp.asarray(tokens), self._with_pos()
+        )
+        # only commit slot's position advance
+        self._pos[slot] += 1
+        self.cache = cache
+        return int(np.asarray(logits[slot, 0]).argmax())
+
+    def _with_pos(self):
+        cache = dict(self.cache)
+        cache["pos"] = jnp.asarray(self._pos)
+        return cache
+
+    def step(self) -> list[Request]:
+        """One decode step over all active slots; returns finished requests."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        tokens = np.zeros((len(self.slots), 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i]._last
+        logits, cache = self._decode(
+            self.params, jnp.asarray(tokens), self._with_pos()
+        )
+        self.cache = cache
+        nxt = np.asarray(logits[:, 0].argmax(axis=-1))
+        finished = []
+        for i in active:
+            req = self.slots[i]
+            self._pos[i] += 1
+            req.generated.append(int(nxt[i]))
+            req._last = int(nxt[i])
+            if (
+                int(nxt[i]) == self.eos
+                or len(req.generated) >= req.max_new_tokens
+                or self._pos[i] >= self.max_len - 1
+            ):
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+        return finished
+
+
+class ReplicaRouter:
+    """Route request batches across inference replicas with the paper's WF.
+
+    Replicas = servers; a request batch = a single-group job whose
+    available servers are the replicas holding the requested model/LoRA;
+    busy time = queued tokens / replica throughput (eq. 2 analogue).
+    """
+
+    def __init__(self, n_replicas: int, tokens_per_step: int = 1024):
+        self.n = n_replicas
+        self.rate = np.full(n_replicas, tokens_per_step, np.int64)
+        self.queued = np.zeros(n_replicas, np.int64)
+
+    def route(
+        self, n_tokens: int, eligible: tuple[int, ...] | None = None
+    ) -> dict[int, int]:
+        """Assign ``n_tokens`` of work; returns {replica: tokens}."""
+        eligible = eligible or tuple(range(self.n))
+        busy = -(-self.queued // self.rate)  # slots, eq. 2
+        prob = AssignmentProblem(
+            busy=busy,
+            mu=self.rate,
+            groups=(TaskGroup(n_tokens, eligible),),
+        )
+        assignment = water_filling(prob)
+        out: dict[int, int] = {}
+        for per in assignment.alloc:
+            for m, cnt in per.items():
+                self.queued[m] += cnt
+                out[m] = out.get(m, 0) + cnt
+        return out
+
+    def drain(self) -> None:
+        """One time step: each replica consumes up to its rate."""
+        self.queued = np.maximum(self.queued - self.rate, 0)

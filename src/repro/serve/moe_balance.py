@@ -1,0 +1,60 @@
+"""WF-balanced MoE expert-replica routing (the paper's technique on TPU).
+
+Mapping (DESIGN.md §2):
+
+  expert replicas across devices  ↔  data-chunk replicas across servers
+  token groups sharing an expert  ↔  task groups ``T_c^k``
+  per-device queued tokens        ↔  busy times ``b_m^c``
+  device token throughput         ↔  capacities ``μ_m^c``
+
+``balance_expert_replicas`` runs the vectorized water-filling
+(:mod:`repro.core.wf_jax`) *inside* a jit-compiled serving step to pick,
+for each expert's token load, how many tokens each replica-holding device
+takes — minimizing the max device queue, i.e. the decode step's
+completion time.  This is the paper's Alg. 2 executing on the
+accelerator, sort/cumsum instead of heaps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wf_jax import water_fill_groups
+
+__all__ = ["balance_expert_replicas", "replica_placement"]
+
+
+def replica_placement(
+    n_experts: int, n_devices: int, replicas: int, seed: int = 0
+) -> jnp.ndarray:
+    """(E, R) device ids; replica r of expert e — deterministic round-robin
+    with a seeded shuffle so co-located experts differ across devices."""
+    key = jax.random.PRNGKey(seed)
+    perm = jax.random.permutation(key, n_experts * replicas) % n_devices
+    return perm.reshape(n_experts, replicas)
+
+
+def balance_expert_replicas(
+    expert_load: jax.Array,  # (E,) tokens routed to each expert this step
+    placement: jax.Array,  # (E, R) device holding each replica
+    device_queue: jax.Array,  # (D,) tokens already queued per device
+    device_rate: jax.Array,  # (D,) tokens/step each device absorbs
+) -> tuple[jax.Array, jax.Array]:
+    """Split each expert's load across its replicas by water-filling.
+
+    Returns (alloc (E, D) tokens per device, phi — max est. queue time).
+    """
+    e, r = placement.shape
+    d = device_queue.shape[0]
+    group_mask = jnp.zeros((e, d), bool).at[
+        jnp.arange(e)[:, None].repeat(r, 1).reshape(-1),
+        placement.reshape(-1),
+    ].set(True)
+    alloc, _, phi = water_fill_groups(
+        device_queue.astype(jnp.int32),
+        device_rate.astype(jnp.int32),
+        group_mask,
+        expert_load.astype(jnp.int32),
+    )
+    return alloc, phi

@@ -1,0 +1,5 @@
+"""Job traces: Alibaba-cluster-v2017-like synthetic generator."""
+
+from .alibaba_like import TraceConfig, generate_trace
+
+__all__ = ["TraceConfig", "generate_trace"]

@@ -1,0 +1,13 @@
+"""Training: optimizer, loss, train step, gradient compression."""
+
+from .optim import AdamWConfig, adamw_init, adamw_update
+from .step import TrainState, make_train_step, train_state_init
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "TrainState",
+    "make_train_step",
+    "train_state_init",
+]

@@ -1,0 +1,149 @@
+"""Train step: loss, grads, AdamW — one jit-able function per config.
+
+``make_train_step(cfg, opt_cfg, microbatches=N)`` builds a step that
+optionally accumulates gradients over N microbatches via ``lax.scan``
+(activation memory ∝ microbatch; one optimizer update per global batch).
+Under pjit, data parallelism (grad mean) and FSDP/TP collectives are all
+emitted by GSPMD from the shardings — there is no explicit pmean here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, forward_train, init_params
+
+from .optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "train_state_init", "make_train_step", "softmax_xent"]
+
+MTP_WEIGHT = 0.3
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+
+    def as_dict(self) -> dict:
+        return {"params": self.params, "opt": self.opt}
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean cross-entropy over non-negative targets (-1 = padding).
+
+    Written as ``logsumexp - predicated-sum`` rather than gather so the
+    vocab axis can stay sharded on the `model` mesh axis end-to-end (the
+    picked-logit term reduces over vocab with an all-reduce instead of a
+    cross-shard gather; no (B,S,V) fp32 one-hot is materialized).
+    """
+    valid = targets >= 0
+    safe = jnp.maximum(targets, 0)
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(
+        jnp.where(vocab_iota == safe[..., None], lf, 0.0), axis=-1
+    )
+    nll = jnp.where(valid, logz - picked, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def train_state_init(
+    rng: jax.Array, cfg: ModelConfig, opt_cfg: AdamWConfig
+) -> TrainState:
+    params = init_params(rng, cfg)
+    return TrainState(params=params, opt=adamw_init(opt_cfg, params))
+
+
+def loss_fn(
+    params: Any,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    remat: bool = True,
+    logits_sharding=None,
+) -> tuple[jax.Array, dict]:
+    logits, aux, mtp_logits = forward_train(params, cfg, batch, remat=remat)
+    if logits_sharding is not None:
+        # keep the vocab axis sharded on `model` through the CE math
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        if mtp_logits is not None:
+            mtp_logits = jax.lax.with_sharding_constraint(
+                mtp_logits, logits_sharding
+            )
+    ce = softmax_xent(logits, batch["targets"])
+    loss = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+    if mtp_logits is not None:
+        # MTP predicts token t+2: logits index i ↔ target index i+1
+        mtp_ce = softmax_xent(mtp_logits, batch["targets"][:, 1:])
+        loss = loss + MTP_WEIGHT * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    remat: bool = True,
+    logits_sharding=None,
+) -> Callable:
+    """Returns ``train_step(state_dict, batch) -> (state_dict, metrics)``.
+
+    ``state_dict`` is ``{"params": …, "opt": …}`` (a plain dict so the
+    same shardings apply to inputs and outputs; donation-friendly).
+    With ``microbatches > 1`` the global batch's leading dim is split and
+    scanned, summing grads (classic gradient accumulation).
+    ``logits_sharding`` (NamedSharding) pins the CE logits layout —
+    pass P(dp, None, "model") under a mesh to keep vocab sharded.
+    """
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(
+            p, cfg, b, remat=remat, logits_sharding=logits_sharding
+        ),
+        has_aux=True,
+    )
+
+    def single(params, batch):
+        (_, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def accumulated(params, batch):
+        def split(x):
+            b = x.shape[0]
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            grads, metrics = single(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return acc, metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        grads, metrics = jax.lax.scan(body, zeros, micro)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return grads, metrics
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params, opt = state["params"], state["opt"]
+        grads, metrics = (
+            accumulated(params, batch) if microbatches > 1 else single(params, batch)
+        )
+        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, grads, opt, params)
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

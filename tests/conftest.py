@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override lives only inside launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_problem(rng, n_servers=20, max_groups=6, max_tasks=60, busy_hi=10):
+    """Random assignment instance used across core tests."""
+    from repro.core import AssignmentProblem, TaskGroup
+
+    busy = rng.integers(0, busy_hi, n_servers)
+    mu = rng.integers(3, 6, n_servers)
+    k = int(rng.integers(1, max_groups))
+    groups = tuple(
+        TaskGroup(
+            int(rng.integers(1, max_tasks)),
+            tuple(
+                sorted(
+                    rng.choice(
+                        n_servers, size=int(rng.integers(2, 8)), replace=False
+                    ).tolist()
+                )
+            ),
+        )
+        for _ in range(k)
+    )
+    return AssignmentProblem(busy=busy, mu=mu, groups=groups)

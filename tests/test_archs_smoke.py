@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced same-family configs on CPU.
+
+One forward/train step + prefill + decode for each of the 10 assigned
+architectures; asserts output shapes and finiteness.  The FULL configs
+are exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import (
+    decode_step,
+    forward_train,
+    init_decode_cache,
+    init_params,
+    prefill,
+)
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng, s=S):
+    batch = {"tokens": jax.random.randint(rng, (B, s), 0, cfg.vocab)}
+    if cfg.block_pattern == "encdec":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype
+        )
+    if cfg.block_pattern == "vlm":
+        batch["patches"] = jax.random.normal(
+            rng, (B, cfg.n_patches, cfg.d_model), cfg.jnp_dtype
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(rng, cfg)
+    logits, aux, mtp = forward_train(params, cfg, _batch(cfg, rng))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+    if cfg.mtp_depth:
+        assert mtp is not None and np.isfinite(np.asarray(mtp)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Decode from a prefilled cache reproduces the full forward."""
+    cfg = get_smoke_config(arch)
+    rng = jax.random.PRNGKey(1)
+    params = init_params(rng, cfg)
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab)
+    full = _batch(cfg, rng)
+    full["tokens"] = toks
+    pre = dict(full)
+    pre["tokens"] = toks[:, :S]
+    logits_full, _, _ = forward_train(params, cfg, full)
+    prefix = cfg.n_patches if cfg.block_pattern == "vlm" else 0
+    lg_pre, cache = prefill(params, cfg, pre, max_len=prefix + S + 4)
+    scale = float(np.abs(np.asarray(logits_full)).max())
+    err_pre = float(
+        np.abs(np.asarray(lg_pre[:, 0]) - np.asarray(logits_full[:, S - 1])).max()
+    )
+    lg_dec, _ = decode_step(params, cfg, toks[:, S:], cache)
+    err_dec = float(
+        np.abs(np.asarray(lg_dec[:, 0]) - np.asarray(logits_full[:, S])).max()
+    )
+    assert err_pre / scale < 2e-3, f"{arch}: prefill mismatch {err_pre / scale}"
+    assert err_dec / scale < 2e-3, f"{arch}: decode mismatch {err_dec / scale}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_only_cache(arch):
+    """decode_* / long_* shapes lower via init_decode_cache."""
+    cfg = get_smoke_config(arch)
+    rng = jax.random.PRNGKey(2)
+    params = init_params(rng, cfg)
+    cache = init_decode_cache(params, cfg, B, 32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = decode_step(params, cfg, tok, cache)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache2["pos"][0]) == int(cache["pos"][0]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_spec(arch):
+    """The FULL configs carry the exact published hyperparameters."""
+    spec = {
+        "qwen3-moe-235b-a22b": dict(n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, vocab=151936),
+        "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128, vocab=129280),
+        "qwen2.5-32b": dict(n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=27648, vocab=152064),
+        "qwen2-72b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=29568, vocab=152064),
+        "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8, d_ff=25600, vocab=151936),
+        "qwen1.5-4b": dict(n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20, d_ff=6912, vocab=151936),
+        "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, d_ff=10240, vocab=32000),
+        "mamba2-130m": dict(n_layers=24, d_model=768, vocab=50280),
+        "llava-next-mistral-7b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336, vocab=32000),
+        "whisper-medium": dict(n_layers=24, d_model=1024, n_heads=16, d_ff=4096, vocab=51865),
+    }[arch]
+    cfg = get_config(arch)
+    for field, value in spec.items():
+        assert getattr(cfg, field) == value, (arch, field)
+    if arch == "qwen3-moe-235b-a22b":
+        assert (cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.d_ff_expert) == (128, 8, 1536)
+    if arch == "deepseek-v3-671b":
+        assert (cfg.moe.n_experts, cfg.moe.n_shared, cfg.moe.top_k) == (256, 1, 8)
+        assert cfg.mla is not None and cfg.mla.kv_lora_rank == 512
+        assert cfg.mtp_depth == 1
+    if arch in ("mamba2-130m", "zamba2-2.7b"):
+        assert cfg.ssm is not None
+        assert cfg.ssm.state_dim == (128 if arch == "mamba2-130m" else 64)

@@ -1,0 +1,117 @@
+"""Core scheduling algorithms: exactness, bounds, heuristic invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AssignmentProblem,
+    OutstandingJob,
+    TaskGroup,
+    group_tasks,
+    nlip,
+    obta,
+    phi_bounds,
+    replica_deletion,
+    reorder_schedule,
+    water_filling,
+    wf_phi,
+)
+from repro.core.rd_plus import replica_deletion_plus
+
+from .conftest import random_problem
+
+
+@pytest.fixture
+def problems(rng):
+    return [random_problem(rng) for _ in range(80)]
+
+
+def test_obta_equals_nlip(problems):
+    """Both are exact; narrowing must not change the optimum (paper V-B)."""
+    for prob in problems:
+        assert obta(prob).phi == nlip(prob).phi
+
+
+def test_obta_within_bounds(problems):
+    for prob in problems:
+        lo, hi = phi_bounds(prob)
+        assert lo <= obta(prob).phi <= hi
+
+
+def test_obta_realized_matches_phi(problems):
+    """The flow model is the physical model: realized completion can
+    never exceed the solver's Φ (eq. 2 cost accounting)."""
+    for prob in problems:
+        a = obta(prob)
+        a.validate(prob)
+        assert a.realized_phi(prob) <= a.phi
+
+
+def test_heuristics_never_beat_optimum(problems):
+    for prob in problems:
+        opt = obta(prob).phi
+        assert water_filling(prob).realized_phi(prob) >= opt
+        assert replica_deletion(prob, 0).realized_phi(prob) >= opt
+        assert replica_deletion_plus(prob, 0).realized_phi(prob) >= opt
+
+
+def test_rd_deterministic(problems):
+    for prob in problems[:20]:
+        assert replica_deletion(prob, 0).alloc == replica_deletion(prob, 0).alloc
+
+
+def test_rd_plus_no_worse_than_rd(problems):
+    for prob in problems:
+        rd = replica_deletion(prob, 0).realized_phi(prob)
+        rdp = replica_deletion_plus(prob, 0).realized_phi(prob)
+        assert rdp <= rd
+
+
+def test_wf_phi_matches_assignment(problems):
+    for prob in problems:
+        assert wf_phi(prob) == water_filling(prob).phi
+
+
+def test_assignments_respect_locality(problems):
+    for prob in problems:
+        for algo in (obta, water_filling, lambda p: replica_deletion(p, 0)):
+            algo(prob).validate(prob)  # raises on violation
+
+
+def test_group_tasks_eq3():
+    groups = group_tasks([(1, 2), (2, 1), (3,), (1, 2, 3), (3,)])
+    sizes = {g.servers: g.size for g in groups}
+    assert sizes == {(1, 2): 2, (3,): 2, (1, 2, 3): 1}
+
+
+def test_reorder_acc_matches_ocwf(rng):
+    """Early-exit must not change the schedule (paper Table I)."""
+    M = 25
+    for _ in range(10):
+        jobs = [
+            OutstandingJob(
+                job_id=j,
+                groups=tuple(
+                    TaskGroup(
+                        int(rng.integers(5, 40)),
+                        tuple(sorted(rng.choice(M, size=4, replace=False).tolist())),
+                    )
+                    for _ in range(int(rng.integers(1, 4)))
+                ),
+                mu=rng.integers(3, 6, M),
+            )
+            for j in range(8)
+        ]
+        s_acc, st_acc = reorder_schedule(jobs, M, accelerated=True)
+        s_full, st_full = reorder_schedule(jobs, M, accelerated=False)
+        assert [j for j, _ in s_acc] == [j for j, _ in s_full]
+        assert st_acc.wf_evals <= st_full.wf_evals
+
+
+def test_reorder_prefers_short_jobs(rng):
+    M = 10
+    mu = np.full(M, 4)
+    small = OutstandingJob(0, (TaskGroup(4, tuple(range(5))),), mu)
+    big = OutstandingJob(1, (TaskGroup(400, tuple(range(5))),), mu)
+    schedule, _ = reorder_schedule([big, small], M)
+    assert schedule[0][0] == 0  # shortest-estimated-time-first

@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    decode_attention,
+    flash_attention,
+    rmsnorm_fused,
+    ssd_scan,
+)
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 5e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,hkv,s,hd",
+    [
+        (2, 4, 2, 256, 128),   # GQA, multi-block
+        (1, 8, 8, 128, 128),   # MHA, single block
+        (2, 2, 1, 512, 128),   # deep KV stream
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(b, h, hkv, s, hd, dtype, causal):
+    q = jax.random.normal(KEY, (b, h, s, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, hkv, s, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, hkv, s, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), exp.astype(jnp.float32), atol=_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,hkv,t,hd",
+    [(2, 4, 2, 1024, 64), (3, 8, 8, 512, 128), (1, 16, 4, 2048, 64)],
+)
+def test_decode_attention_matches_ref(b, h, hkv, t, hd, dtype):
+    rng = np.random.default_rng(b * 100 + t)
+    q = jax.random.normal(KEY, (b, h, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, hkv, t, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, hkv, t, hd), dtype)
+    pos = jnp.asarray(rng.integers(1, t, b), jnp.int32)
+    out = decode_attention(q, k, v, pos)
+    exp = ref.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), exp.astype(jnp.float32), atol=_tol(dtype)
+    )
+
+
+def test_decode_attention_respects_pos():
+    """Keys beyond pos must not influence the output."""
+    b, h, t, hd = 1, 2, 512, 64
+    q = jax.random.normal(KEY, (b, h, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, h, t, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, h, t, hd))
+    pos = jnp.array([100], jnp.int32)
+    out1 = decode_attention(q, k, v, pos)
+    k2 = k.at[:, :, 200:].set(1e4)  # poison dead region
+    v2 = v.at[:, :, 200:].set(-1e4)
+    out2 = decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+@pytest.mark.parametrize(
+    "b,s,h,p,n", [(2, 256, 3, 64, 32), (1, 128, 2, 32, 16), (2, 384, 1, 64, 64)]
+)
+def test_ssd_scan_matches_sequential_ref(b, s, h, p, n):
+    x = jax.random.normal(KEY, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 5), (b, s, n)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(KEY, 6), (b, s, n)) * 0.5
+    y, hl = ssd_scan(x, dt, a, bm, cm)
+    ye, hle = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(y, ye, atol=2e-4)
+    np.testing.assert_allclose(hl, hle, atol=2e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    """Kernel ≡ the model's XLA chunked SSD (ssm.ssd_chunked)."""
+    from repro.models.ssm import ssd_chunked
+
+    b, s, h, p, n = 2, 256, 2, 32, 16
+    x = jax.random.normal(KEY, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 5), (b, s, n)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(KEY, 6), (b, s, n)) * 0.5
+    y_kernel, h_kernel = ssd_scan(x, dt, a, bm, cm)
+    y_model, h_model = ssd_chunked(x, dt, a, bm, cm, chunk=64)
+    np.testing.assert_allclose(y_kernel, y_model, atol=2e-4)
+    np.testing.assert_allclose(h_kernel, h_model, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 37, 512), (128, 256), (1, 1, 8192)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), shape[-1:], dtype)
+    out = rmsnorm_fused(x, g)
+    exp = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), exp.astype(jnp.float32), atol=_tol(dtype)
+    )
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel ≡ the model's sdpa math (repro.models.attention)."""
+    from repro.models.attention import sdpa
+
+    b, hkv, g, s, hd = 2, 2, 2, 256, 128
+    q = jax.random.normal(KEY, (b, s, hkv, g, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, hd))
+    model_out = sdpa(q, k, v, causal=True)  # (b, s, hkv, g, hd)
+    q_k = q.transpose(0, 2, 3, 1, 4).reshape(b, hkv * g, s, hd)
+    out = flash_attention(
+        q_k, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), causal=True
+    )
+    out = out.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)
+    np.testing.assert_allclose(out, model_out, atol=5e-5)

@@ -1,0 +1,106 @@
+"""Cluster simulator semantics: eq. 2 cost model, reordering, faults."""
+
+import numpy as np
+
+from repro.core import Job, TaskGroup, obta, water_filling
+from repro.runtime import ClusterSimulator, ServerEvent
+from repro.traces import TraceConfig, generate_trace
+
+
+def _one_job(n_tasks=12, servers=(0, 1, 2), mu_val=4, arrival=0, job_id=0, m=4):
+    mu = np.full(m, mu_val)
+    return Job(
+        job_id=job_id,
+        arrival=arrival,
+        groups=(TaskGroup(n_tasks, servers),),
+        mu=mu,
+    )
+
+
+def test_single_job_jct_matches_eq2():
+    """12 tasks on 3 servers at μ=4 → one slot each, JCT = 1."""
+    sim = ClusterSimulator(4, water_filling)
+    res = sim.run([_one_job()])
+    assert res.jct[0] == 1
+
+
+def test_serial_fifo_backlog():
+    """Two identical jobs on one server: second waits for the first."""
+    j0 = _one_job(n_tasks=8, servers=(0,), mu_val=4, job_id=0)
+    j1 = _one_job(n_tasks=8, servers=(0,), mu_val=4, job_id=1)
+    res = ClusterSimulator(4, water_filling).run([j0, j1])
+    assert res.jct[0] == 2  # ceil(8/4)
+    assert res.jct[1] == 4  # waits 2 slots, then 2 slots
+
+
+def test_partial_slot_is_charged():
+    """5 tasks at μ=4 on one server → 2 slots (eq. 2 ceiling)."""
+    res = ClusterSimulator(2, water_filling).run(
+        [_one_job(n_tasks=5, servers=(0,), mu_val=4, m=2)]
+    )
+    assert res.jct[0] == 2
+
+
+def test_reordering_never_loses_tasks():
+    cfg = TraceConfig(n_jobs=30, total_tasks=6_000, n_servers=30, seed=5)
+    jobs = generate_trace(cfg)
+    res = ClusterSimulator(30, reorder=True).run(jobs)
+    assert len(res.jct) == len(jobs)
+
+
+def test_reordering_improves_mean_jct():
+    cfg = TraceConfig(
+        n_jobs=40, total_tasks=10_000, n_servers=40, utilization=0.7, seed=3
+    )
+    jobs = generate_trace(cfg)
+    fifo = ClusterSimulator(40, water_filling).run(jobs)
+    reord = ClusterSimulator(40, reorder=True).run(jobs)
+    assert reord.mean_jct <= fifo.mean_jct
+
+
+def test_server_failure_reassigns_with_locality():
+    """Tasks stranded on a dead server move to surviving replicas only."""
+    job = _one_job(n_tasks=40, servers=(0, 1), mu_val=4, m=4)
+    ev = (ServerEvent(slot=1, kind="fail", server=0),)
+    res = ClusterSimulator(4, water_filling, events=ev).run([job])
+    assert res.jct.get(0) is not None  # job still completes
+    assert res.reassignments > 0
+    assert not res.failed_jobs
+
+
+def test_data_loss_marks_job_failed():
+    job = _one_job(n_tasks=40, servers=(0,), mu_val=4, m=2)
+    ev = (ServerEvent(slot=1, kind="fail", server=0),)
+    res = ClusterSimulator(2, water_filling, events=ev).run([job])
+    assert res.failed_jobs == [0]
+    assert 0 not in res.jct
+
+
+def test_slowdown_stretches_completion():
+    job = _one_job(n_tasks=64, servers=(0,), mu_val=4, m=2)
+    base = ClusterSimulator(2, water_filling).run([job]).jct[0]
+    ev = (ServerEvent(slot=0, kind="slowdown", server=0, factor=4.0),)
+    slow = ClusterSimulator(2, water_filling, events=ev).run([job]).jct[0]
+    assert slow > base
+
+
+def test_exact_assignment_in_simulator():
+    cfg = TraceConfig(n_jobs=20, total_tasks=4_000, n_servers=20, seed=1)
+    jobs = generate_trace(cfg)
+    res = ClusterSimulator(20, obta).run(jobs)
+    assert len(res.jct) == len(jobs)
+
+
+def test_trace_statistics():
+    cfg = TraceConfig()
+    jobs = generate_trace(cfg)
+    assert len(jobs) == 250
+    assert sum(j.n_tasks for j in jobs) == 113_653
+    mean_groups = np.mean([len(j.groups) for j in jobs])
+    assert 4.5 < mean_groups < 6.5  # paper: 5.52
+    # determinism
+    jobs2 = generate_trace(cfg)
+    assert all(
+        a.arrival == b.arrival and a.n_tasks == b.n_tasks
+        for a, b in zip(jobs, jobs2)
+    )

@@ -1,0 +1,76 @@
+"""On-device water-filling == host water-filling (TPU adaptation oracle)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import AssignmentProblem, TaskGroup, water_filling
+from repro.core import waterlevel as wl_np
+from repro.core import wf_jax
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=100, deadline=None)
+def test_water_level_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    m = 16
+    busy = rng.integers(0, 12, m)
+    mu = rng.integers(1, 6, m)
+    mask = rng.random(m) < 0.6
+    if not mask.any():
+        mask[0] = True
+    demand = int(rng.integers(1, 80))
+    expected = wl_np.water_level(busy[mask], mu[mask], demand)
+    got = int(
+        wf_jax.water_level(
+            jnp.array(busy), jnp.array(mu), jnp.array(mask), jnp.int32(demand)
+        )
+    )
+    assert got == expected
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=60, deadline=None)
+def test_alloc_conserves_and_respects_caps(seed):
+    rng = np.random.default_rng(seed)
+    m = 16
+    busy = rng.integers(0, 12, m)
+    mu = rng.integers(1, 6, m)
+    mask = rng.random(m) < 0.6
+    if not mask.any():
+        mask[0] = True
+    demand = int(rng.integers(1, 80))
+    alloc, xi = wf_jax.water_fill_alloc(
+        jnp.array(busy), jnp.array(mu), jnp.array(mask), jnp.int32(demand)
+    )
+    alloc = np.asarray(alloc)
+    assert alloc.sum() == demand
+    assert (alloc[~mask] == 0).all()
+    assert (alloc <= np.maximum(int(xi) - busy, 0) * mu).all()
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=40, deadline=None)
+def test_grouped_scan_matches_sequential_wf(seed):
+    rng = np.random.default_rng(seed)
+    m = 16
+    busy = rng.integers(0, 10, m)
+    mu = rng.integers(1, 6, m)
+    k = int(rng.integers(1, 5))
+    gm = rng.random((k, m)) < 0.5
+    for i in range(k):
+        if not gm[i].any():
+            gm[i, 0] = True
+    demands = rng.integers(1, 50, k)
+    groups = tuple(
+        TaskGroup(int(demands[i]), tuple(np.flatnonzero(gm[i]).tolist()))
+        for i in range(k)
+    )
+    prob = AssignmentProblem(busy=busy, mu=mu, groups=groups)
+    expected = water_filling(prob)
+    alloc, _, phi = wf_jax.water_fill_groups(
+        jnp.array(busy), jnp.array(mu), jnp.array(gm), jnp.array(demands)
+    )
+    assert int(phi) == expected.phi
+    assert (np.asarray(alloc).sum(axis=1) == demands).all()

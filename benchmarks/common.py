@@ -1,51 +1,46 @@
-"""Shared benchmark runner for the paper's trace-driven evaluation."""
+"""Shared benchmark runner for the paper's trace-driven evaluation.
+
+All cells run through the scheduling engine
+(:class:`repro.runtime.SchedulingEngine`) with policies resolved from the
+runtime registry, so benchmark algorithm names are pure configuration.
+"""
 
 from __future__ import annotations
 
 import csv
 import os
 import time
-from typing import Callable
 
 import numpy as np
 
-from repro.core import nlip, obta, replica_deletion, water_filling
-from repro.core.rd_plus import replica_deletion_plus
-from repro.runtime import ClusterSimulator
+from repro.runtime import Policy, SchedulingEngine, make_policy
 from repro.traces import TraceConfig, generate_trace
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
-# name -> (assign_fn or None, reorder, accelerated)
-ALGORITHMS: dict[str, tuple[Callable | None, bool, bool]] = {
-    "nlip": (nlip, False, False),
-    "obta": (obta, False, False),
-    "wf": (water_filling, False, False),
-    "rd": (lambda p: replica_deletion(p, 0), False, False),
-    "rd+": (lambda p: replica_deletion_plus(p, 0), False, False),
-    "ocwf": (None, True, False),
-    "ocwf-acc": (None, True, True),
+# benchmark name -> (assignment algorithm, ordering) in the runtime registry
+POLICY_SPECS: dict[str, tuple[str, str]] = {
+    "nlip": ("nlip", "fifo"),
+    "obta": ("obta", "fifo"),
+    "wf": ("wf", "fifo"),
+    "wf_jax": ("wf_jax", "fifo"),
+    "rd": ("rd", "fifo"),
+    "rd+": ("rd_plus", "fifo"),
+    "ocwf": ("wf", "ocwf"),
+    "ocwf-acc": ("wf", "ocwf-acc"),
+    "setf": ("wf", "setf"),
 }
 
 FIFO_ALGOS = ["nlip", "obta", "wf", "rd", "rd+"]
 ALL_ALGOS = FIFO_ALGOS + ["ocwf", "ocwf-acc"]
 
 
-def run_cell(
-    cfg: TraceConfig, algo: str
-) -> dict[str, float]:
-    """Simulate one (trace config, algorithm) cell; returns metrics."""
-    jobs = generate_trace(cfg)
-    assign, reorder, accelerated = ALGORITHMS[algo]
-    sim = ClusterSimulator(
-        cfg.n_servers,
-        assign or water_filling,
-        reorder=reorder,
-        accelerated=accelerated,
-    )
-    t0 = time.perf_counter()
-    res = sim.run(jobs)
-    wall = time.perf_counter() - t0
+def policy_for(algo: str) -> Policy:
+    assign, ordering = POLICY_SPECS[algo]
+    return make_policy(assign, ordering)
+
+
+def summarize(res, wall: float) -> dict[str, float]:
     values = np.asarray(list(res.jct.values()), dtype=np.float64)
     return {
         "mean_jct": res.mean_jct,
@@ -57,6 +52,15 @@ def run_cell(
         "makespan": float(res.makespan),
         "wall_s": wall,
     }
+
+
+def run_cell(cfg: TraceConfig, algo: str) -> dict[str, float]:
+    """Simulate one (trace config, algorithm) cell; returns metrics."""
+    jobs = generate_trace(cfg)
+    engine = SchedulingEngine(cfg.n_servers, policy_for(algo))
+    t0 = time.perf_counter()
+    res = engine.run(jobs)
+    return summarize(res, time.perf_counter() - t0)
 
 
 def write_csv(path: str, rows: list[dict], fieldnames: list[str]) -> None:

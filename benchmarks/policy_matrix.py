@@ -1,0 +1,139 @@
+"""The cross-policy comparison matrix: {policy × ordering × trace scenario}.
+
+Drives every registered assignment algorithm (obta, nlip, wf, wf_jax, rd,
+rd_plus) under FIFO and prioritized-reordering scheduling across all
+registered trace scenarios through the single engine API, and prints a
+JCT + per-job assignment-overhead table mirroring the paper's Table 1 —
+but generalized to the full policy family (Figs. 8-14 are slices of this
+matrix).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.policy_matrix [--smoke] \
+        [--scenarios alibaba,bursty] [--orderings fifo,ocwf-acc,setf]
+
+``--smoke`` runs a reduced matrix sized for CI (~2 min on 2 CPU cores).
+Detailed rows land in ``results/policy_matrix.csv``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro.runtime import SchedulingEngine, list_policies, make_policy
+from repro.traces import TRACES, generate
+
+from .common import RESULTS_DIR, emit, summarize, write_csv
+
+DEFAULT_ORDERINGS = ("fifo", "ocwf-acc", "setf")
+
+FIELDS = [
+    "scenario",
+    "assign",
+    "ordering",
+    "mean_jct",
+    "p50_jct",
+    "p90_jct",
+    "p99_jct",
+    "max_jct",
+    "mean_overhead_us",
+    "makespan",
+    "wall_s",
+]
+
+
+def run_matrix(
+    *,
+    scenarios: tuple[str, ...],
+    orderings: tuple[str, ...],
+    assigners: tuple[str, ...],
+    trace_kw: dict,
+) -> list[dict]:
+    rows: list[dict] = []
+    for scenario in scenarios:
+        jobs_kw = dict(trace_kw)
+        n_servers = jobs_kw["n_servers"]
+        jobs = generate(scenario, **jobs_kw)
+        for assign in assigners:
+            for ordering in orderings:
+                policy = make_policy(assign, ordering)
+                engine = SchedulingEngine(n_servers, policy)
+                t0 = time.perf_counter()
+                res = engine.run(jobs)
+                metrics = summarize(res, time.perf_counter() - t0)
+                row = {
+                    "scenario": scenario,
+                    "assign": assign,
+                    "ordering": ordering,
+                    **{k: round(v, 3) for k, v in metrics.items()},
+                }
+                rows.append(row)
+                emit(
+                    f"matrix/{scenario}/{policy.name}",
+                    metrics["mean_overhead_us"],
+                    metrics["mean_jct"],
+                )
+    return rows
+
+
+def print_table(rows: list[dict]) -> None:
+    cols = ["scenario", "assign", "ordering", "mean_jct", "p99_jct",
+            "mean_overhead_us", "makespan"]
+    widths = {
+        c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols
+    }
+    header = "  ".join(c.ljust(widths[c]) for c in cols)
+    print("\n" + header)
+    print("-" * len(header))
+    prev_scenario = None
+    for r in rows:
+        if r["scenario"] != prev_scenario and prev_scenario is not None:
+            print()
+        prev_scenario = r["scenario"]
+        print("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true", help="CI-sized matrix")
+    parser.add_argument(
+        "--scenarios", default=",".join(sorted(TRACES)),
+        help="comma-separated trace scenarios",
+    )
+    parser.add_argument(
+        "--orderings", default=",".join(DEFAULT_ORDERINGS),
+        help="comma-separated orderings (fifo,ocwf,ocwf-acc,setf)",
+    )
+    parser.add_argument(
+        "--assign", default=",".join(list_policies()),
+        help="comma-separated assignment algorithms",
+    )
+    parser.add_argument(
+        "--no-header", action="store_true",
+        help="suppress the CSV header (when a caller already printed it)",
+    )
+    args = parser.parse_args(argv)
+
+    if args.smoke:
+        trace_kw = dict(n_jobs=25, total_tasks=4_000, n_servers=25, seed=0)
+    else:
+        trace_kw = dict(n_jobs=120, total_tasks=40_000, n_servers=60, seed=0)
+
+    t0 = time.time()
+    if not args.no_header:
+        print("name,us_per_call,derived", flush=True)
+    rows = run_matrix(
+        scenarios=tuple(args.scenarios.split(",")),
+        orderings=tuple(args.orderings.split(",")),
+        assigners=tuple(args.assign.split(",")),
+        trace_kw=trace_kw,
+    )
+    write_csv(os.path.join(RESULTS_DIR, "policy_matrix.csv"), rows, FIELDS)
+    print_table(rows)
+    print(f"# matrix wall time: {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

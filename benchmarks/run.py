@@ -30,11 +30,11 @@ def main(argv: list[str] | None = None) -> None:
     parser.add_argument(
         "--only",
         default=None,
-        help="comma-separated subset: figs,table1,fig14,moe,roofline",
+        help="comma-separated subset: figs,table1,fig14,matrix,moe,roofline",
     )
     args = parser.parse_args(argv)
 
-    which = set((args.only or "figs,table1,fig14,moe,roofline").split(","))
+    which = set((args.only or "figs,table1,fig14,matrix,moe,roofline").split(","))
     t0 = time.time()
     print("name,us_per_call,derived", flush=True)
 
@@ -65,6 +65,13 @@ def main(argv: list[str] | None = None) -> None:
 
         f14_base = dataclasses.replace(base, utilization=0.75, zipf_alpha=2.0)
         paper_fig14.run(cap_ranges=cap_ranges, base=f14_base, algos=ALL_ALGOS)
+    if "matrix" in which:
+        from . import policy_matrix
+
+        matrix_args = ["--no-header"]  # run.py already printed the header
+        if args.quick:
+            matrix_args.append("--smoke")
+        policy_matrix.main(matrix_args)
     if "moe" in which:
         from . import moe_balance
 

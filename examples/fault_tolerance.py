@@ -7,7 +7,6 @@ and with two stragglers (4× slowdown) under the reordered scheduler —
 showing locality-aware reassignment and busy-time-balanced mitigation.
 """
 
-import numpy as np
 
 from repro.runtime import ClusterSimulator, ServerEvent
 from repro.traces import TraceConfig, generate_trace

@@ -16,7 +16,6 @@ Demonstrates the full stack working together on CPU:
 """
 
 import argparse
-import os
 
 import jax
 import jax.numpy as jnp

@@ -21,15 +21,31 @@ from .instance import (
 )
 from .obta import nlip, obta, solve_exact
 from .rd import replica_deletion
-from .reorder import OutstandingJob, ReorderStats, reorder_schedule
+from .rd_plus import replica_deletion_plus
+from .reorder import (
+    OutstandingJob,
+    ReorderStats,
+    priority_schedule,
+    reorder_schedule,
+)
 from .waterlevel import water_fill_alloc, water_level
 from .wf import water_filling, wf_phi
+
+
+def _wf_jax(problem: AssignmentProblem) -> Assignment:
+    """Lazy import so core stays jax-free until the device path is used."""
+    from .wf_jax import water_filling_jax
+
+    return water_filling_jax(problem)
+
 
 ALGORITHMS = {
     "nlip": nlip,
     "obta": obta,
     "wf": water_filling,
+    "wf_jax": _wf_jax,
     "rd": replica_deletion,
+    "rd_plus": replica_deletion_plus,
 }
 
 __all__ = [
@@ -47,8 +63,10 @@ __all__ = [
     "obta",
     "solve_exact",
     "replica_deletion",
+    "replica_deletion_plus",
     "OutstandingJob",
     "ReorderStats",
+    "priority_schedule",
     "reorder_schedule",
     "water_fill_alloc",
     "water_level",

@@ -28,7 +28,12 @@ from .bounds import phi_minus
 from .instance import Assignment, AssignmentProblem, Job, TaskGroup
 from .wf import water_filling, wf_phi
 
-__all__ = ["OutstandingJob", "ReorderStats", "reorder_schedule"]
+__all__ = [
+    "OutstandingJob",
+    "ReorderStats",
+    "reorder_schedule",
+    "priority_schedule",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +52,17 @@ class ReorderStats:
     wf_evals: int = 0
     bound_evals: int = 0
     positions: int = 0
+
+
+def _commit_busy(
+    busy: np.ndarray, assignment: Assignment, mu: np.ndarray, n_servers: int
+) -> np.ndarray:
+    """eq. 2 commit: raise each used server's busy time by ⌈assigned/μ⌉."""
+    loads = assignment.server_loads(n_servers)
+    used = loads > 0
+    busy = busy.copy()
+    busy[used] += -(-loads[used] // mu[used])
+    return busy
 
 
 def reorder_schedule(
@@ -92,13 +108,37 @@ def reorder_schedule(
         assert best_job is not None
         prob = AssignmentProblem(busy=busy, mu=best_job.mu, groups=best_job.groups)
         assignment = assigner(prob)
-        loads = assignment.server_loads(n_servers)
-        used = loads > 0
-        busy = busy.copy()
-        busy[used] += -(-loads[used] // best_job.mu[used])  # eq. 2 commit
+        busy = _commit_busy(busy, assignment, best_job.mu, n_servers)
         schedule.append((best_job.job_id, assignment))
         del remaining[best_job.job_id]
 
+    return schedule, stats
+
+
+def priority_schedule(
+    jobs: list[OutstandingJob],
+    n_servers: int,
+    *,
+    key: Callable[[OutstandingJob], tuple],
+    assigner: Callable[[AssignmentProblem], Assignment] = water_filling,
+) -> tuple[list[tuple[int, Assignment]], ReorderStats]:
+    """Assign jobs in a *static* priority order (e.g. SETF).
+
+    Unlike :func:`reorder_schedule` there is no per-position WF scan: the
+    order is fixed up front by ``key`` (ascending), so scheduling costs one
+    assignment per job.  Busy-time commits between positions follow eq. 2,
+    identical to the OCWF walk.
+    """
+    stats = ReorderStats()
+    busy = np.zeros(n_servers, dtype=np.int64)
+    schedule: list[tuple[int, Assignment]] = []
+    for j in sorted(jobs, key=key):
+        stats.positions += 1
+        prob = AssignmentProblem(busy=busy, mu=j.mu, groups=j.groups)
+        assignment = assigner(prob)
+        stats.wf_evals += 1
+        busy = _commit_busy(busy, assignment, j.mu, n_servers)
+        schedule.append((j.job_id, assignment))
     return schedule, stats
 
 

@@ -4,18 +4,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 # --- everything below may import jax (device count is now locked) --------
 import argparse  # noqa: E402
-import dataclasses  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCHS, get_config  # noqa: E402
 from repro.configs.shapes import SHAPES, applicable, get_shape  # noqa: E402
 from repro.launch.hlo import collective_stats  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import ModelConfig  # noqa: E402
+from repro.parallel import compat  # noqa: E402
 from repro.train import AdamWConfig  # noqa: E402
 
 """Roofline probes: exact per-device FLOPs / bytes / collective traffic.
@@ -130,7 +129,7 @@ def _lower_cell(cfg, shape, *, force_direct: bool, unroll: bool = True):
         )
         step_mod.forward_train = patched
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
         cost = compiled.cost_analysis()
         coll = collective_stats(compiled.as_text())

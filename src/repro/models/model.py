@@ -35,7 +35,7 @@ from .config import ModelConfig
 from .ffn import moe_apply, moe_init, swiglu, swiglu_init
 from .layers import embed, embed_init, rmsnorm, rmsnorm_init, unembed
 from .ssm import mamba2_apply, mamba2_decode, mamba2_init, mamba2_init_state
-from repro.parallel.constrain import shard
+from repro.parallel.constrain import ambient_mesh, shard
 
 Params = Any
 Cache = Any
@@ -95,7 +95,7 @@ def _layer_init(key: jax.Array, cfg: ModelConfig) -> dict:
 def _ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, no_drop: bool = False):
     if cfg.moe.n_experts:
         if cfg.moe.dispatch == "shard_map" and not no_drop:
-            mesh = jax.sharding.get_abstract_mesh()
+            mesh = ambient_mesh()
             if (
                 mesh is not None
                 and "model" in mesh.axis_names

@@ -19,14 +19,27 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["shard", "logical_spec"]
+__all__ = ["shard", "logical_spec", "ambient_mesh"]
 
 
-def _ambient_mesh():
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+def ambient_mesh():
+    """The ambient abstract mesh, or None when unset / unsupported.
+
+    ``jax.sharding.get_abstract_mesh`` only exists in newer jax; on older
+    releases the ambient-mesh mechanism is absent entirely, so there is
+    nothing to constrain against and model code falls back to no-op
+    sharding (single-device tests and smoke runs).
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    mesh = get()
+    if mesh is None or not getattr(mesh, "axis_names", ()):
         return None
     return mesh
+
+
+_ambient_mesh = ambient_mesh  # internal alias kept for call sites below
 
 
 def logical_spec(mesh, *tags) -> P:

@@ -1,5 +1,35 @@
-"""Cluster runtime: time-slotted simulator, events, metrics."""
+"""Cluster runtime: scheduling engine, cluster state, events, policies.
 
-from .simulator import ClusterSimulator, ServerEvent, SimResult
+Layered as engine (drive loop) → policies (assignment × ordering) →
+cluster (queues + eq. 2 busy state) → events (fault timeline).
+``ClusterSimulator`` remains as the legacy façade.
+"""
 
-__all__ = ["ClusterSimulator", "ServerEvent", "SimResult"]
+from .cluster import ClusterState, QueueSegment
+from .engine import SchedulingEngine, SimResult
+from .events import EventTimeline, ServerEvent
+from .policies import (
+    ORDERINGS,
+    Policy,
+    SchedulingPolicy,
+    get_assigner,
+    list_policies,
+    make_policy,
+)
+from .simulator import ClusterSimulator
+
+__all__ = [
+    "ClusterSimulator",
+    "ClusterState",
+    "EventTimeline",
+    "ORDERINGS",
+    "Policy",
+    "QueueSegment",
+    "SchedulingEngine",
+    "SchedulingPolicy",
+    "ServerEvent",
+    "SimResult",
+    "get_assigner",
+    "list_policies",
+    "make_policy",
+]

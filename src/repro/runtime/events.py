@@ -1,0 +1,53 @@
+"""Cluster event timeline: fault/straggler events injected into the engine.
+
+Arrivals are carried by the jobs themselves (``Job.arrival``); this module
+covers everything *else* that changes cluster state mid-run — server
+failures, recoveries, slowdowns and speedups — as a sorted timeline the
+engine drains at the top of each slot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator
+
+__all__ = ["ServerEvent", "EventTimeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerEvent:
+    """A fault/straggler event injected at the start of a slot."""
+
+    slot: int
+    kind: str  # "fail" | "recover" | "slowdown" | "speedup"
+    server: int
+    factor: float = 2.0  # slowdown divisor
+
+    _KINDS = ("fail", "recover", "slowdown", "speedup")
+
+    def __post_init__(self) -> None:
+        if self.kind not in self._KINDS:
+            raise ValueError(
+                f"unknown event kind {self.kind!r}; expected one of {self._KINDS}"
+            )
+
+
+class EventTimeline:
+    """Slot-ordered event queue with a drain cursor."""
+
+    def __init__(self, events: Iterable[ServerEvent] = ()):
+        self._events = sorted(events, key=lambda e: e.slot)
+        self._next = 0
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def reset(self) -> None:
+        self._next = 0
+
+    def due(self, slot: int) -> Iterator[ServerEvent]:
+        """Yield (and consume) every event with ``event.slot <= slot``."""
+        while self._next < len(self._events) and self._events[self._next].slot <= slot:
+            ev = self._events[self._next]
+            self._next += 1
+            yield ev

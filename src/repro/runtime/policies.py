@@ -1,0 +1,145 @@
+"""Pluggable scheduling policies: {assignment algorithm} × {job ordering}.
+
+A :class:`SchedulingPolicy` bundles the two axes the paper evaluates:
+
+- **assignment** — how one job's task groups are placed given busy times
+  (OBTA, NLIP, WF, the on-device wf_jax, RD, RD+; paper Sec. III);
+- **ordering** — what happens to the *outstanding* job set on each
+  arrival (paper Sec. IV):
+
+  - ``fifo``     — new job is appended; nothing is reshuffled;
+  - ``ocwf``     — full shortest-estimated-time-first rescan (Alg. 3);
+  - ``ocwf-acc`` — OCWF with the ``Φ^-`` early-exit (same schedule,
+    fewer WF evaluations);
+  - ``setf``     — shortest *elapsed* (attained) service first: a cheap
+    static priority that needs one assignment per job, no WF scan.
+
+The engine is policy-agnostic: anything satisfying the
+:class:`SchedulingPolicy` protocol plugs in, and :func:`make_policy`
+builds instances from the registered names so {policy × ordering} sweeps
+are pure configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, runtime_checkable
+
+from repro.core import (
+    ALGORITHMS,
+    Assignment,
+    AssignmentProblem,
+    OutstandingJob,
+    ReorderStats,
+    priority_schedule,
+    reorder_schedule,
+)
+
+__all__ = [
+    "AssignFn",
+    "SchedulingPolicy",
+    "Policy",
+    "ORDERINGS",
+    "get_assigner",
+    "make_policy",
+    "list_policies",
+]
+
+AssignFn = Callable[[AssignmentProblem], Assignment]
+
+ORDERINGS = ("fifo", "ocwf", "ocwf-acc", "setf")
+
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """What the engine requires of a policy."""
+
+    name: str
+
+    @property
+    def reorders(self) -> bool:
+        """True if arrivals trigger a full reschedule of outstanding jobs."""
+        ...
+
+    def assign(self, problem: AssignmentProblem) -> Assignment:
+        """Place one job's task groups given current busy times."""
+        ...
+
+    def schedule(
+        self,
+        outstanding: list[OutstandingJob],
+        n_servers: int,
+        *,
+        attained: dict[int, int] | None = None,
+    ) -> tuple[list[tuple[int, Assignment]], ReorderStats]:
+        """Re-order and re-assign the whole outstanding set (reorder mode)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Concrete :class:`SchedulingPolicy` built from registered parts."""
+
+    name: str
+    assigner: AssignFn
+    ordering: str = "fifo"
+
+    def __post_init__(self) -> None:
+        if self.ordering not in ORDERINGS:
+            raise ValueError(
+                f"unknown ordering {self.ordering!r}; expected one of {ORDERINGS}"
+            )
+
+    @property
+    def reorders(self) -> bool:
+        return self.ordering != "fifo"
+
+    def assign(self, problem: AssignmentProblem) -> Assignment:
+        return self.assigner(problem)
+
+    def schedule(
+        self,
+        outstanding: list[OutstandingJob],
+        n_servers: int,
+        *,
+        attained: dict[int, int] | None = None,
+    ) -> tuple[list[tuple[int, Assignment]], ReorderStats]:
+        if self.ordering in ("ocwf", "ocwf-acc"):
+            return reorder_schedule(
+                outstanding,
+                n_servers,
+                accelerated=self.ordering == "ocwf-acc",
+                assigner=self.assigner,
+            )
+        if self.ordering == "setf":
+            served = attained or {}
+            return priority_schedule(
+                outstanding,
+                n_servers,
+                key=lambda j: (served.get(j.job_id, 0), j.job_id),
+                assigner=self.assigner,
+            )
+        raise ValueError(f"ordering {self.ordering!r} does not reschedule")
+
+
+def get_assigner(name: str) -> AssignFn:
+    """Resolve a registered assignment algorithm by name."""
+    try:
+        return ALGORITHMS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown assignment algorithm {name!r}; "
+            f"registered: {sorted(ALGORITHMS)}"
+        ) from None
+
+
+def make_policy(assign: str = "wf", ordering: str = "fifo") -> Policy:
+    """Build a policy from registered names, e.g. ``make_policy("obta")``
+    or ``make_policy("wf", "ocwf-acc")``."""
+    name = assign if ordering == "fifo" else f"{assign}+{ordering}"
+    return Policy(name=name, assigner=get_assigner(assign), ordering=ordering)
+
+
+def list_policies() -> list[str]:
+    """Names of all registered assignment algorithms."""
+    return sorted(ALGORITHMS)

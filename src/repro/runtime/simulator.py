@@ -1,113 +1,31 @@
-"""Time-slotted cluster simulator for distributed job executions.
+"""Back-compat façade over the scheduling engine.
 
-Implements the paper's execution model exactly (Sec. II):
+``ClusterSimulator`` predates the pluggable-policy engine: it took a bare
+assignment *function* plus ``reorder``/``accelerated`` flags.  It now
+wraps :class:`repro.runtime.engine.SchedulingEngine` with a policy built
+from those arguments.  Semantics are unchanged for the historical usage
+patterns (any ``assign`` under FIFO; WF under reordering); one deliberate
+improvement: with ``reorder=True`` or under fault reassignment the given
+``assign`` function is now used consistently, where the old simulator
+hard-coded water-filling for those paths regardless of ``assign``.
+New code should construct the engine directly:
 
-- time is divided into identical slots; servers hold FIFO queues of
-  outstanding job tasks;
-- server ``m`` processes up to ``μ_m^h`` tasks of the *head* job ``h`` per
-  slot; a partially-filled slot is still a full slot, so the backlog cost
-  is ``⌈o_m^h/μ_m^h⌉`` per queued job — matching the busy-time estimate of
-  eq. 2 *by construction*;
-- on each arrival, the configured assignment algorithm places the new
-  job's tasks (FIFO scenario), or the whole outstanding set is re-ordered
-  and re-assigned (prioritized-reordering scenario, Sec. IV).
-
-Beyond the paper, the simulator supports fault-tolerance events
-(server failure / slowdown) with locality-aware reassignment of the
-affected tasks — the framework's straggler-mitigation path.
-
-Bookkeeping invariant: queue segments are always keyed by the job's
-*original* group index, so locality sets stay correct across arbitrarily
-many reorders and reassignments.
+    engine = SchedulingEngine(n_servers, make_policy("obta"))
+    engine = SchedulingEngine(n_servers, make_policy("wf", "ocwf-acc"))
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Callable
+from repro.core import water_filling
 
-import numpy as np
-
-from repro.core import (
-    Assignment,
-    AssignmentProblem,
-    Job,
-    OutstandingJob,
-    TaskGroup,
-    reorder_schedule,
-    water_filling,
-)
+from .engine import SchedulingEngine, SimResult
+from .events import ServerEvent
+from .policies import AssignFn, Policy
 
 __all__ = ["ClusterSimulator", "ServerEvent", "SimResult"]
 
-AssignFn = Callable[[AssignmentProblem], Assignment]
 
-
-@dataclasses.dataclass(frozen=True)
-class ServerEvent:
-    """A fault/straggler event injected at the start of a slot."""
-
-    slot: int
-    kind: str  # "fail" | "recover" | "slowdown" | "speedup"
-    server: int
-    factor: float = 2.0  # slowdown divisor
-
-
-@dataclasses.dataclass
-class SimResult:
-    jct: dict[int, int]  # job_id -> completion time (slots)
-    overhead_s: list[float]  # per-arrival scheduling wall time
-    makespan: int
-    failed_jobs: list[int]  # jobs whose data became unavailable
-    reassignments: int = 0  # tasks moved by fault handling
-
-    @property
-    def mean_jct(self) -> float:
-        return float(np.mean(list(self.jct.values()))) if self.jct else 0.0
-
-    @property
-    def mean_overhead_s(self) -> float:
-        return float(np.mean(self.overhead_s)) if self.overhead_s else 0.0
-
-    def jct_percentile(self, q: float) -> float:
-        return float(np.percentile(list(self.jct.values()), q)) if self.jct else 0.0
-
-    def jct_cdf(self) -> tuple[np.ndarray, np.ndarray]:
-        v = np.sort(np.asarray(list(self.jct.values())))
-        return v, np.arange(1, v.size + 1) / v.size
-
-
-class _Segment:
-    """Contiguous run of one job's tasks on one server's queue.
-
-    ``per_group`` maps *original* group index -> task count.
-    """
-
-    __slots__ = ("job_id", "per_group", "total")
-
-    def __init__(self, job_id: int, per_group: dict[int, int]):
-        self.job_id = job_id
-        self.per_group = {g: c for g, c in per_group.items() if c > 0}
-        self.total = sum(self.per_group.values())
-
-    def take(self, n: int) -> int:
-        """Remove up to n tasks; returns how many were taken."""
-        taken = 0
-        for g in list(self.per_group):
-            if taken >= n:
-                break
-            d = min(self.per_group[g], n - taken)
-            self.per_group[g] -= d
-            taken += d
-            if self.per_group[g] == 0:
-                del self.per_group[g]
-        self.total -= taken
-        return taken
-
-
-class ClusterSimulator:
+class ClusterSimulator(SchedulingEngine):
     """Drives a trace of :class:`repro.core.Job` through the cluster."""
 
     def __init__(
@@ -120,231 +38,15 @@ class ClusterSimulator:
         events: tuple[ServerEvent, ...] = (),
         max_slots: int = 10_000_000,
     ):
-        self.n_servers = n_servers
+        ordering = ("ocwf-acc" if accelerated else "ocwf") if reorder else "fifo"
+        policy = Policy(
+            name=getattr(assign, "__name__", "custom"),
+            assigner=assign,
+            ordering=ordering,
+        )
+        super().__init__(
+            n_servers, policy, events=events, max_slots=max_slots
+        )
         self.assign = assign
         self.reorder = reorder
         self.accelerated = accelerated
-        self.events = sorted(events, key=lambda e: e.slot)
-        self.max_slots = max_slots
-
-    # ---- state helpers ---------------------------------------------------
-
-    def _effective_mu(self, job: Job) -> np.ndarray:
-        cached = self._mu_cache.get(job.job_id)
-        if cached is None:
-            cached = np.maximum(1, (job.mu / self._slow).astype(np.int64))
-            self._mu_cache[job.job_id] = cached
-        return cached
-
-    def _busy_times(self) -> np.ndarray:
-        """eq. 2: b_m = Σ_h ⌈o_m^h / μ_m^h⌉ over queued segments."""
-        busy = np.zeros(self.n_servers, dtype=np.int64)
-        for m in range(self.n_servers):
-            if not self._alive[m]:
-                continue
-            for seg in self._queues[m]:
-                mu = self._effective_mu(self._jobs[seg.job_id])[m]
-                busy[m] += -(-seg.total // mu)
-        return busy
-
-    def _live_servers(self, group: TaskGroup) -> tuple[int, ...]:
-        return tuple(m for m in group.servers if self._alive[m])
-
-    def _mark_failed(self, job_id: int) -> None:
-        if job_id not in self._failed:
-            self._failed.append(job_id)
-        self._remaining.pop(job_id, None)
-        # purge zombie segments so queues don't process unaccounted tasks
-        for q in self._queues:
-            for seg in list(q):
-                if seg.job_id == job_id:
-                    q.remove(seg)
-
-    def _enqueue(
-        self, job_id: int, assignment: Assignment, gids: list[int]
-    ) -> None:
-        """Append assignment to queues; alloc index i corresponds to
-        original group id gids[i]."""
-        per_server: dict[int, dict[int, int]] = {}
-        for i, per in enumerate(assignment.alloc):
-            g = gids[i]
-            for m, cnt in per.items():
-                if cnt <= 0:
-                    continue
-                bucket = per_server.setdefault(m, {})
-                bucket[g] = bucket.get(g, 0) + cnt
-        for m, per_group in per_server.items():
-            self._queues[m].append(_Segment(job_id, per_group))
-
-    # ---- assignment projections -------------------------------------------
-
-    def _project(
-        self, job: Job, per_group_remaining: dict[int, int]
-    ) -> tuple[tuple[TaskGroup, ...], list[int]] | None:
-        """(projected groups over alive servers, original gid per index);
-        None if some non-empty group lost all replicas."""
-        groups: list[TaskGroup] = []
-        gids: list[int] = []
-        for g, cnt in sorted(per_group_remaining.items()):
-            if cnt <= 0:
-                continue
-            servers = self._live_servers(job.groups[g])
-            if not servers:
-                return None
-            groups.append(TaskGroup(cnt, servers))
-            gids.append(g)
-        return tuple(groups), gids
-
-    def _outstanding(self) -> tuple[list[OutstandingJob], dict[int, list[int]]]:
-        """Per-job remaining counts from queues, projected to alive servers."""
-        rem: dict[int, dict[int, int]] = {}
-        for m in range(self.n_servers):
-            for seg in self._queues[m]:
-                acc = rem.setdefault(seg.job_id, {})
-                for g, cnt in seg.per_group.items():
-                    acc[g] = acc.get(g, 0) + cnt
-        out: list[OutstandingJob] = []
-        gid_maps: dict[int, list[int]] = {}
-        for job_id in sorted(rem):
-            job = self._jobs[job_id]
-            proj = self._project(job, rem[job_id])
-            if proj is None:
-                self._mark_failed(job_id)
-                continue
-            groups, gids = proj
-            if groups:
-                out.append(
-                    OutstandingJob(
-                        job_id=job_id, groups=groups, mu=self._effective_mu(job)
-                    )
-                )
-                gid_maps[job_id] = gids
-        return out, gid_maps
-
-    def _do_reorder(self, extra: OutstandingJob | None = None,
-                    extra_gids: list[int] | None = None) -> None:
-        outstanding, gid_maps = self._outstanding()
-        if extra is not None:
-            outstanding.append(extra)
-            gid_maps[extra.job_id] = list(extra_gids or [])
-        schedule, _ = reorder_schedule(
-            outstanding, self.n_servers, accelerated=self.accelerated
-        )
-        self._queues = [deque() for _ in range(self.n_servers)]
-        for job_id, assignment in schedule:
-            self._enqueue(job_id, assignment, gid_maps[job_id])
-
-    # ---- fault handling ----------------------------------------------------
-
-    def _apply_event(self, ev: ServerEvent) -> None:
-        m = ev.server
-        if ev.kind == "fail":
-            self._alive[m] = False
-            stranded = list(self._queues[m])
-            self._queues[m] = deque()
-            for seg in stranded:
-                job = self._jobs[seg.job_id]
-                if seg.job_id in self._failed:
-                    continue
-                proj = self._project(job, seg.per_group)
-                if proj is None:
-                    self._mark_failed(seg.job_id)
-                    continue
-                groups, gids = proj
-                prob = AssignmentProblem(
-                    busy=self._busy_times(),
-                    mu=self._effective_mu(job),
-                    groups=groups,
-                )
-                self._enqueue(seg.job_id, water_filling(prob), gids)
-                self._reassigned += seg.total
-        elif ev.kind == "recover":
-            self._alive[m] = True
-        elif ev.kind == "slowdown":
-            self._slow[m] = ev.factor
-            self._mu_cache.clear()
-            if self.reorder:  # straggler mitigation: rebalance everything
-                self._do_reorder()
-        elif ev.kind == "speedup":
-            self._slow[m] = 1.0
-            self._mu_cache.clear()
-        else:
-            raise ValueError(f"unknown event kind {ev.kind!r}")
-
-    # ---- main loop -----------------------------------------------------------
-
-    def run(self, jobs: list[Job]) -> SimResult:
-        self._jobs = {j.job_id: j for j in jobs}
-        self._queues: list[deque[_Segment]] = [
-            deque() for _ in range(self.n_servers)
-        ]
-        self._alive = np.ones(self.n_servers, dtype=bool)
-        self._slow = np.ones(self.n_servers, dtype=np.float64)
-        self._mu_cache: dict[int, np.ndarray] = {}
-        self._remaining = {j.job_id: j.n_tasks for j in jobs if j.n_tasks > 0}
-        self._failed: list[int] = []
-        self._reassigned = 0
-
-        arrivals = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
-        jct: dict[int, int] = {}
-        overheads: list[float] = []
-        ai = ei = slot = 0
-        while slot < self.max_slots:
-            while ei < len(self.events) and self.events[ei].slot <= slot:
-                self._apply_event(self.events[ei])
-                ei += 1
-            while ai < len(arrivals) and arrivals[ai].arrival <= slot:
-                job = arrivals[ai]
-                ai += 1
-                proj = self._project(
-                    job, {g: grp.size for g, grp in enumerate(job.groups)}
-                )
-                if proj is None:
-                    self._mark_failed(job.job_id)
-                    continue
-                groups, gids = proj
-                t0 = time.perf_counter()
-                if self.reorder:
-                    self._do_reorder(
-                        extra=OutstandingJob(
-                            job_id=job.job_id,
-                            groups=groups,
-                            mu=self._effective_mu(job),
-                        ),
-                        extra_gids=gids,
-                    )
-                else:
-                    prob = AssignmentProblem(
-                        busy=self._busy_times(),
-                        mu=self._effective_mu(job),
-                        groups=groups,
-                    )
-                    assignment = self.assign(prob)
-                    assignment.validate(prob)
-                    self._enqueue(job.job_id, assignment, gids)
-                overheads.append(time.perf_counter() - t0)
-            for m in range(self.n_servers):
-                if not self._alive[m] or not self._queues[m]:
-                    continue
-                seg = self._queues[m][0]
-                mu = int(self._effective_mu(self._jobs[seg.job_id])[m])
-                taken = seg.take(mu)
-                if seg.total == 0:
-                    self._queues[m].popleft()
-                if taken and seg.job_id in self._remaining:
-                    self._remaining[seg.job_id] -= taken
-                    if self._remaining[seg.job_id] <= 0:
-                        jct[seg.job_id] = slot + 1 - self._jobs[seg.job_id].arrival
-                        del self._remaining[seg.job_id]
-            slot += 1
-            if ai >= len(arrivals) and not self._remaining:
-                break
-        else:
-            raise RuntimeError("simulation exceeded max_slots — livelock?")
-        return SimResult(
-            jct=jct,
-            overhead_s=overheads,
-            makespan=slot,
-            failed_jobs=self._failed,
-            reassignments=self._reassigned,
-        )

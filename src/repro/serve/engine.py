@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AssignmentProblem, TaskGroup, water_filling
+from repro.core import AssignmentProblem, TaskGroup
 from repro.models import ModelConfig, decode_step, init_decode_cache, prefill
+from repro.runtime.policies import AssignFn, get_assigner
 
 __all__ = ["make_prefill_step", "make_decode_step", "ServeEngine", "ReplicaRouter"]
 
@@ -134,17 +135,27 @@ class ServeEngine:
 
 
 class ReplicaRouter:
-    """Route request batches across inference replicas with the paper's WF.
+    """Route request batches across inference replicas with a registered
+    assignment policy (the paper's WF by default).
 
     Replicas = servers; a request batch = a single-group job whose
     available servers are the replicas holding the requested model/LoRA;
     busy time = queued tokens / replica throughput (eq. 2 analogue).
+    ``policy`` is any name in :data:`repro.core.ALGORITHMS` (``"wf"``,
+    ``"obta"``, ``"wf_jax"``, …) or a callable assignment function.
     """
 
-    def __init__(self, n_replicas: int, tokens_per_step: int = 1024):
+    def __init__(
+        self,
+        n_replicas: int,
+        tokens_per_step: int = 1024,
+        *,
+        policy: str | AssignFn = "wf",
+    ):
         self.n = n_replicas
         self.rate = np.full(n_replicas, tokens_per_step, np.int64)
         self.queued = np.zeros(n_replicas, np.int64)
+        self.assign = get_assigner(policy) if isinstance(policy, str) else policy
 
     def route(
         self, n_tokens: int, eligible: tuple[int, ...] | None = None
@@ -157,7 +168,7 @@ class ReplicaRouter:
             mu=self.rate,
             groups=(TaskGroup(n_tokens, eligible),),
         )
-        assignment = water_filling(prob)
+        assignment = self.assign(prob)
         out: dict[int, int] = {}
         for per in assignment.alloc:
             for m, cnt in per.items():

@@ -1,5 +1,58 @@
-"""Job traces: Alibaba-cluster-v2017-like synthetic generator."""
+"""Job traces: scenario registry over synthetic generators.
+
+Three scenarios share one group/placement/capacity model
+(:mod:`repro.traces.placement`) and differ in size/arrival processes:
+
+- ``alibaba``        — the paper's Alibaba-v2017-matched segment;
+- ``bursty``         — Poisson bursts of same-slot arrivals;
+- ``pareto_diurnal`` — Pareto-tailed job sizes under a day/night rate.
+
+``generate(scenario, **overrides)`` makes scenario choice a config axis:
+overrides are applied onto the scenario's config dataclass, so sweeps like
+{policy × ordering × trace} (``benchmarks/policy_matrix.py``) stay pure
+configuration.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core import Job
 
 from .alibaba_like import TraceConfig, generate_trace
+from .bursty import BurstyTraceConfig, generate_bursty_trace
+from .pareto import ParetoTraceConfig, generate_pareto_trace
 
-__all__ = ["TraceConfig", "generate_trace"]
+__all__ = [
+    "TraceConfig",
+    "BurstyTraceConfig",
+    "ParetoTraceConfig",
+    "generate_trace",
+    "generate_bursty_trace",
+    "generate_pareto_trace",
+    "TRACES",
+    "generate",
+    "list_scenarios",
+]
+
+# scenario -> (config dataclass, generator)
+TRACES: dict[str, tuple[type, Callable]] = {
+    "alibaba": (TraceConfig, generate_trace),
+    "bursty": (BurstyTraceConfig, generate_bursty_trace),
+    "pareto_diurnal": (ParetoTraceConfig, generate_pareto_trace),
+}
+
+
+def generate(scenario: str, **overrides) -> list[Job]:
+    """Generate a trace by scenario name with config-field overrides."""
+    try:
+        cfg_cls, gen = TRACES[scenario]
+    except KeyError:
+        raise KeyError(
+            f"unknown trace scenario {scenario!r}; registered: {sorted(TRACES)}"
+        ) from None
+    return gen(cfg_cls(**overrides))
+
+
+def list_scenarios() -> list[str]:
+    return sorted(TRACES)

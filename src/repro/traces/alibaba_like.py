@@ -15,7 +15,8 @@ matched to the described statistics:
   group's available set — exactly the paper's placement model;
 - per-(server, job) capacities ``μ_m^c ~ U{cap_lo..cap_hi}`` (default 3..5).
 
-Everything is seeded and deterministic.
+Everything is seeded and deterministic.  The group/placement/capacity
+model is shared with the other scenarios via :mod:`repro.traces.placement`.
 """
 
 from __future__ import annotations
@@ -24,7 +25,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import Job, TaskGroup
+from repro.core import Job
+
+from .placement import build_job, lognormal_sizes
 
 __all__ = ["TraceConfig", "generate_trace"]
 
@@ -44,53 +47,10 @@ class TraceConfig:
     seed: int = 0
 
 
-def _job_sizes(cfg: TraceConfig, rng: np.random.Generator) -> np.ndarray:
-    """Heavy-tailed task counts summing to cfg.total_tasks."""
-    raw = rng.lognormal(mean=0.0, sigma=1.6, size=cfg.n_jobs)
-    sizes = np.maximum(1, np.round(raw / raw.sum() * cfg.total_tasks)).astype(int)
-    # fix rounding drift on the largest job
-    sizes[np.argmax(sizes)] += cfg.total_tasks - int(sizes.sum())
-    if sizes.min() < 1:  # pathological drift; re-clamp
-        sizes = np.maximum(sizes, 1)
-    return sizes
-
-
-def _group_split(n_tasks: int, mean_groups: float, rng: np.random.Generator) -> list[int]:
-    k = max(1, min(n_tasks, 1 + rng.poisson(mean_groups - 1.0)))
-    if k == 1:
-        return [n_tasks]
-    w = rng.dirichlet(np.full(k, 0.8))
-    sizes = np.maximum(1, np.round(w * n_tasks)).astype(int)
-    sizes[np.argmax(sizes)] += n_tasks - int(sizes.sum())
-    while sizes.min() < 1:  # the fix above can push a bucket negative
-        i, j = np.argmin(sizes), np.argmax(sizes)
-        sizes[j] += sizes[i] - 1
-        sizes[i] = 1
-    return [int(s) for s in sizes]
-
-
-def _zipf_weights(n: int, alpha: float) -> np.ndarray:
-    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** alpha
-    return w / w.sum()
-
-
-def _group_servers(
-    cfg: TraceConfig, rng: np.random.Generator, avail_lo: int, avail_hi: int
-) -> tuple[int, ...]:
-    """Paper's placement: Zipf-ranked anchor in a random permutation, then
-    ``p`` consecutive servers."""
-    perm = rng.permutation(cfg.n_servers)
-    weights = _zipf_weights(cfg.n_servers, cfg.zipf_alpha)
-    anchor = int(perm[rng.choice(cfg.n_servers, p=weights)])
-    p = int(rng.integers(avail_lo, avail_hi + 1))
-    return tuple(sorted({(anchor + i) % cfg.n_servers for i in range(p)}))
-
-
 def generate_trace(cfg: TraceConfig) -> list[Job]:
     rng = np.random.default_rng(cfg.seed)
-    sizes = _job_sizes(cfg, rng)
+    sizes = lognormal_sizes(cfg.n_jobs, cfg.total_tasks, rng)
 
-    jobs: list[Job] = []
     mean_mu = (cfg.cap_lo + cfg.cap_hi) / 2.0
     # offered work per job in expected server-slots
     work = sizes / mean_mu
@@ -99,12 +59,19 @@ def generate_trace(cfg: TraceConfig) -> list[Job]:
     gaps = rng.exponential(1.0, size=cfg.n_jobs)
     arrivals = np.floor(np.cumsum(gaps) / gaps.sum() * span).astype(int)
 
-    for j in range(cfg.n_jobs):
-        group_sizes = _group_split(int(sizes[j]), cfg.mean_groups_per_job, rng)
-        groups = tuple(
-            TaskGroup(gs, _group_servers(cfg, rng, cfg.avail_lo, cfg.avail_hi))
-            for gs in group_sizes
+    return [
+        build_job(
+            j,
+            int(arrivals[j]),
+            int(sizes[j]),
+            n_servers=cfg.n_servers,
+            mean_groups=cfg.mean_groups_per_job,
+            zipf_alpha=cfg.zipf_alpha,
+            avail_lo=cfg.avail_lo,
+            avail_hi=cfg.avail_hi,
+            cap_lo=cfg.cap_lo,
+            cap_hi=cfg.cap_hi,
+            rng=rng,
         )
-        mu = rng.integers(cfg.cap_lo, cfg.cap_hi + 1, size=cfg.n_servers)
-        jobs.append(Job(job_id=j, arrival=int(arrivals[j]), groups=groups, mu=mu))
-    return jobs
+        for j in range(cfg.n_jobs)
+    ]

@@ -1,0 +1,101 @@
+"""Shared building blocks for synthetic job traces.
+
+Every trace scenario (Alibaba-like, bursty, Pareto-diurnal) composes the
+same three ingredients from the paper's Sec. V-A setup — only the job-size
+and arrival processes differ per scenario:
+
+- heavy-tailed per-job task counts normalised to a target total;
+- a shifted-Poisson split of each job's tasks into task groups with a
+  skewed Dirichlet allocation;
+- the paper's data-placement model: a Zipf(α)-ranked anchor server in a
+  random permutation, then ``p`` consecutive servers (mod M) form the
+  group's available set.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Job, TaskGroup
+
+__all__ = [
+    "zipf_weights",
+    "group_split",
+    "group_servers",
+    "lognormal_sizes",
+    "build_job",
+]
+
+
+def zipf_weights(n: int, alpha: float) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** alpha
+    return w / w.sum()
+
+
+def lognormal_sizes(
+    n_jobs: int, total_tasks: int, rng: np.random.Generator, sigma: float = 1.6
+) -> np.ndarray:
+    """Heavy-tailed task counts summing to ``total_tasks``."""
+    raw = rng.lognormal(mean=0.0, sigma=sigma, size=n_jobs)
+    sizes = np.maximum(1, np.round(raw / raw.sum() * total_tasks)).astype(int)
+    # fix rounding drift on the largest job
+    sizes[np.argmax(sizes)] += total_tasks - int(sizes.sum())
+    if sizes.min() < 1:  # pathological drift; re-clamp
+        sizes = np.maximum(sizes, 1)
+    return sizes
+
+
+def group_split(
+    n_tasks: int, mean_groups: float, rng: np.random.Generator
+) -> list[int]:
+    """Split a job's tasks into ≥1 groups, mean count ≈ ``mean_groups``."""
+    k = max(1, min(n_tasks, 1 + rng.poisson(mean_groups - 1.0)))
+    if k == 1:
+        return [n_tasks]
+    w = rng.dirichlet(np.full(k, 0.8))
+    sizes = np.maximum(1, np.round(w * n_tasks)).astype(int)
+    sizes[np.argmax(sizes)] += n_tasks - int(sizes.sum())
+    while sizes.min() < 1:  # the fix above can push a bucket negative
+        i, j = np.argmin(sizes), np.argmax(sizes)
+        sizes[j] += sizes[i] - 1
+        sizes[i] = 1
+    return [int(s) for s in sizes]
+
+
+def group_servers(
+    n_servers: int,
+    rng: np.random.Generator,
+    zipf_alpha: float,
+    avail_lo: int,
+    avail_hi: int,
+) -> tuple[int, ...]:
+    """Paper's placement: Zipf-ranked anchor in a random permutation, then
+    ``p`` consecutive servers."""
+    perm = rng.permutation(n_servers)
+    weights = zipf_weights(n_servers, zipf_alpha)
+    anchor = int(perm[rng.choice(n_servers, p=weights)])
+    p = int(rng.integers(avail_lo, avail_hi + 1))
+    return tuple(sorted({(anchor + i) % n_servers for i in range(p)}))
+
+
+def build_job(
+    job_id: int,
+    arrival: int,
+    n_tasks: int,
+    *,
+    n_servers: int,
+    mean_groups: float,
+    zipf_alpha: float,
+    avail_lo: int,
+    avail_hi: int,
+    cap_lo: int,
+    cap_hi: int,
+    rng: np.random.Generator,
+) -> Job:
+    """One job under the shared group/placement/capacity model."""
+    groups = tuple(
+        TaskGroup(gs, group_servers(n_servers, rng, zipf_alpha, avail_lo, avail_hi))
+        for gs in group_split(n_tasks, mean_groups, rng)
+    )
+    mu = rng.integers(cap_lo, cap_hi + 1, size=n_servers)
+    return Job(job_id=job_id, arrival=arrival, groups=groups, mu=mu)

@@ -10,7 +10,7 @@ def rng():
     return np.random.default_rng(0)
 
 
-def random_problem(rng, n_servers=20, max_groups=6, max_tasks=60, busy_hi=10):
+def make_random_problem(rng, n_servers=20, max_groups=6, max_tasks=60, busy_hi=10):
     """Random assignment instance used across core tests."""
     from repro.core import AssignmentProblem, TaskGroup
 
@@ -31,3 +31,13 @@ def random_problem(rng, n_servers=20, max_groups=6, max_tasks=60, busy_hi=10):
         for _ in range(k)
     )
     return AssignmentProblem(busy=busy, mu=mu, groups=groups)
+
+
+@pytest.fixture
+def random_problem():
+    """Factory fixture: tests call ``random_problem(rng, **overrides)``.
+
+    A fixture (rather than a bare module-level helper) so test modules never
+    need ``from .conftest import …`` — relative imports from conftest break
+    collection when tests/ is not a package."""
+    return make_random_problem

@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    AssignmentProblem,
     OutstandingJob,
     TaskGroup,
     group_tasks,
@@ -18,11 +17,9 @@ from repro.core import (
 )
 from repro.core.rd_plus import replica_deletion_plus
 
-from .conftest import random_problem
-
 
 @pytest.fixture
-def problems(rng):
+def problems(rng, random_problem):
     return [random_problem(rng) for _ in range(80)]
 
 

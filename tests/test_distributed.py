@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # 8-device CPU-mesh subprocess runs
+
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -41,6 +44,7 @@ def test_sharded_train_step_matches_single_device():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_smoke_config
         from repro.train import AdamWConfig, make_train_step, train_state_init
+        from repro.parallel import compat
         from repro.parallel import param_sharding, batch_sharding
 
         cfg = get_smoke_config("qwen1.5-4b")
@@ -59,7 +63,7 @@ def test_sharded_train_step_matches_single_device():
                           "v": param_sharding(mesh, state["opt"]["v"]),
                           "step": NamedSharding(mesh, P())}}
         b_sh = batch_sharding(mesh, batch)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             s_dist, m_dist = jax.jit(
                 make_train_step(cfg, opt), in_shardings=(st_sh, b_sh)
             )(state, batch)

@@ -1,0 +1,210 @@
+"""Scheduling-engine semantics: policy registry, orderings, invariants.
+
+Covers the engine subsystem (runtime/{events,cluster,policies,engine}):
+every registered policy is feasible end-to-end, FIFO vs. reordering JCT
+invariants hold, fault/slowdown events preserve the original-group-index
+bookkeeping invariant, and the wf_jax device path matches host WF without
+needing hypothesis.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, Job, TaskGroup, water_filling
+from repro.runtime import (
+    ORDERINGS,
+    EventTimeline,
+    SchedulingEngine,
+    ServerEvent,
+    list_policies,
+    make_policy,
+)
+from repro.traces import generate, list_scenarios
+
+REGISTERED = sorted(ALGORITHMS)
+
+
+def _trace(**overrides):
+    kw = dict(n_jobs=20, total_tasks=2_500, n_servers=20, seed=11)
+    kw.update(overrides)
+    return generate("alibaba", **kw)
+
+
+# ---- registry ---------------------------------------------------------------
+
+
+def test_registry_has_all_paper_policies():
+    assert {"obta", "nlip", "wf", "wf_jax", "rd", "rd_plus"} <= set(REGISTERED)
+    assert list_policies() == REGISTERED
+
+
+def test_make_policy_rejects_unknown_names():
+    with pytest.raises(KeyError):
+        make_policy("not-a-policy")
+    with pytest.raises(ValueError):
+        make_policy("wf", "not-an-ordering")
+
+
+@pytest.mark.parametrize("name", REGISTERED)
+def test_every_policy_feasible_on_random_problems(name, rng, random_problem):
+    """validate() raises on locality violations or task loss."""
+    assign = ALGORITHMS[name]
+    for _ in range(12):
+        prob = random_problem(rng, n_servers=14, max_groups=4, max_tasks=30)
+        assignment = assign(prob)
+        assignment.validate(prob)
+        assert assignment.realized_phi(prob) >= 0
+
+
+# ---- engine completes under every configuration -----------------------------
+
+
+@pytest.mark.parametrize("name", REGISTERED)
+def test_engine_completes_all_jobs_fifo(name):
+    jobs = _trace()
+    res = SchedulingEngine(20, make_policy(name)).run(jobs)
+    assert sorted(res.jct) == [j.job_id for j in jobs]
+    assert not res.failed_jobs
+
+
+@pytest.mark.parametrize("ordering", [o for o in ORDERINGS if o != "fifo"])
+def test_engine_completes_all_jobs_reordered(ordering):
+    jobs = _trace()
+    res = SchedulingEngine(20, make_policy("wf", ordering)).run(jobs)
+    assert sorted(res.jct) == [j.job_id for j in jobs]
+
+
+@pytest.mark.parametrize("scenario", ["bursty", "pareto_diurnal"])
+def test_engine_runs_new_trace_scenarios(scenario):
+    jobs = generate(scenario, n_jobs=20, total_tasks=2_500, n_servers=20, seed=4)
+    res = SchedulingEngine(20, "wf").run(jobs)
+    assert sorted(res.jct) == [j.job_id for j in jobs]
+
+
+def test_all_scenarios_registered():
+    assert list_scenarios() == ["alibaba", "bursty", "pareto_diurnal"]
+
+
+# ---- ordering invariants ----------------------------------------------------
+
+
+def test_reordering_no_worse_than_fifo_mean_jct():
+    jobs = _trace(n_jobs=30, total_tasks=6_000, n_servers=25, seed=3)
+    fifo = SchedulingEngine(25, make_policy("wf")).run(jobs)
+    reord = SchedulingEngine(25, make_policy("wf", "ocwf-acc")).run(jobs)
+    assert reord.mean_jct <= fifo.mean_jct
+
+
+def test_ocwf_acc_schedule_equals_ocwf():
+    """The early-exit must not change the realized schedule (Table I)."""
+    jobs = _trace(seed=9)
+    acc = SchedulingEngine(20, make_policy("wf", "ocwf-acc")).run(jobs)
+    full = SchedulingEngine(20, make_policy("wf", "ocwf")).run(jobs)
+    assert acc.jct == full.jct
+
+
+def test_setf_prefers_new_short_job_over_served_elephant():
+    mu = np.full(6, 2)
+    elephant = Job(0, 0, (TaskGroup(200, (0, 1, 2)),), mu)
+    mouse = Job(1, 3, (TaskGroup(4, (0, 1, 2)),), mu)
+    res = SchedulingEngine(6, make_policy("wf", "setf")).run([elephant, mouse])
+    # the mouse (0 attained service at arrival) jumps the queue
+    assert res.jct[1] + 3 < res.jct[0]
+
+
+# ---- fault events preserve the bookkeeping invariant ------------------------
+
+
+def _event_engine(policy, events, n_servers=20):
+    """Engine that checks the group-index/locality invariant every slot."""
+    return SchedulingEngine(
+        n_servers,
+        policy,
+        events=events,
+        on_slot=lambda cluster, slot: cluster.assert_invariant(),
+    )
+
+
+@pytest.mark.parametrize("ordering", ["fifo", "ocwf-acc", "setf"])
+def test_events_preserve_group_index_invariant(ordering):
+    jobs = _trace(seed=21)
+    events = (
+        ServerEvent(slot=1, kind="fail", server=0),
+        ServerEvent(slot=2, kind="slowdown", server=3, factor=3.0),
+        ServerEvent(slot=4, kind="recover", server=0),
+        ServerEvent(slot=6, kind="speedup", server=3),
+        ServerEvent(slot=7, kind="fail", server=5),
+    )
+    res = _event_engine(make_policy("wf", ordering), events).run(jobs)
+    # every job either completes or is explicitly failed — none vanish
+    assert set(res.jct).isdisjoint(res.failed_jobs)
+    assert set(res.jct) | set(res.failed_jobs) == {j.job_id for j in jobs}
+
+
+def test_failure_reassigns_within_locality_set():
+    mu = np.full(4, 4)
+    job = Job(0, 0, (TaskGroup(40, (0, 1)),), mu)
+    events = (ServerEvent(slot=1, kind="fail", server=0),)
+    res = _event_engine(make_policy("wf"), events, n_servers=4).run([job])
+    assert res.jct.get(0) is not None
+    assert res.reassignments > 0
+    assert not res.failed_jobs
+
+
+def test_data_loss_marks_job_failed_not_stuck():
+    mu = np.full(2, 4)
+    job = Job(0, 0, (TaskGroup(40, (0,)),), mu)
+    events = (ServerEvent(slot=1, kind="fail", server=0),)
+    res = _event_engine(make_policy("wf"), events, n_servers=2).run([job])
+    assert res.failed_jobs == [0]
+    assert 0 not in res.jct
+
+
+def test_event_timeline_orders_and_drains():
+    evs = [ServerEvent(5, "fail", 1), ServerEvent(2, "slowdown", 0)]
+    tl = EventTimeline(evs)
+    assert [e.slot for e in tl.due(4)] == [2]
+    assert [e.slot for e in tl.due(5)] == [5]
+    assert list(tl.due(100)) == []
+
+
+def test_server_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        ServerEvent(slot=0, kind="explode", server=1)
+
+
+# ---- wf_jax ≡ wf oracle (deterministic; hypothesis-free) --------------------
+
+
+def test_wf_jax_matches_host_wf_on_random_problems(random_problem):
+    from repro.core.wf_jax import water_filling_jax
+
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        prob = random_problem(rng, n_servers=16, max_groups=5, max_tasks=40)
+        host = water_filling(prob)
+        dev = water_filling_jax(prob)
+        dev.validate(prob)
+        assert dev.phi == host.phi
+        assert dev.alloc == host.alloc
+
+
+def test_wf_jax_batch_matches_single(random_problem):
+    from repro.core.wf_jax import water_filling_jax, water_filling_jax_batch
+
+    rng = np.random.default_rng(0)
+    probs = [
+        random_problem(rng, n_servers=16, max_groups=5, max_tasks=40)
+        for _ in range(12)
+    ]
+    batch = water_filling_jax_batch(probs)
+    for prob, got in zip(probs, batch):
+        got.validate(prob)
+        assert got.phi == water_filling_jax(prob).phi
+
+
+def test_wf_jax_engine_jct_equals_wf():
+    jobs = _trace(seed=13)
+    host = SchedulingEngine(20, make_policy("wf")).run(jobs)
+    dev = SchedulingEngine(20, make_policy("wf_jax")).run(jobs)
+    assert host.jct == dev.jct

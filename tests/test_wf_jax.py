@@ -1,7 +1,14 @@
-"""On-device water-filling == host water-filling (TPU adaptation oracle)."""
+"""On-device water-filling == host water-filling (TPU adaptation oracle).
+
+Property-based half of the oracle; deterministic seed-sweep coverage of the
+same equivalence lives in ``test_engine.py`` so environments without
+``hypothesis`` still exercise the wf_jax path."""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

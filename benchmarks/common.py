@@ -42,6 +42,7 @@ def policy_for(algo: str) -> Policy:
 
 def summarize(res, wall: float) -> dict[str, float]:
     values = np.asarray(list(res.jct.values()), dtype=np.float64)
+    overheads = np.asarray(res.overhead_s, dtype=np.float64)
     return {
         "mean_jct": res.mean_jct,
         "p50_jct": float(np.percentile(values, 50)),
@@ -49,6 +50,9 @@ def summarize(res, wall: float) -> dict[str, float]:
         "p99_jct": float(np.percentile(values, 99)),
         "max_jct": float(values.max()),
         "mean_overhead_us": res.mean_overhead_s * 1e6,
+        "p99_overhead_us": (
+            float(np.percentile(overheads, 99) * 1e6) if overheads.size else 0.0
+        ),
         "makespan": float(res.makespan),
         "wall_s": wall,
     }

@@ -25,6 +25,7 @@ from .rd_plus import replica_deletion_plus
 from .reorder import (
     OutstandingJob,
     ReorderStats,
+    commit_busy,
     priority_schedule,
     reorder_schedule,
 )
@@ -39,6 +40,13 @@ def _wf_jax(problem: AssignmentProblem) -> Assignment:
     return water_filling_jax(problem)
 
 
+def _wf_jax_chain(problems: list[AssignmentProblem]) -> list[Assignment]:
+    """Lazy import so core stays jax-free until the device path is used."""
+    from .wf_jax import water_filling_jax_chain
+
+    return water_filling_jax_chain(problems)
+
+
 ALGORITHMS = {
     "nlip": nlip,
     "obta": obta,
@@ -48,8 +56,16 @@ ALGORITHMS = {
     "rd_plus": replica_deletion_plus,
 }
 
+# assignment algorithms with a native many-problems admission path: one
+# call places a whole same-slot burst with eq. 2 commits between jobs
+# (everything else falls back to Policy.assign_batch's sequential walk)
+BATCH_ALGORITHMS = {
+    "wf_jax": _wf_jax_chain,
+}
+
 __all__ = [
     "ALGORITHMS",
+    "BATCH_ALGORITHMS",
     "Assignment",
     "AssignmentProblem",
     "Job",
@@ -66,6 +82,7 @@ __all__ = [
     "replica_deletion_plus",
     "OutstandingJob",
     "ReorderStats",
+    "commit_busy",
     "priority_schedule",
     "reorder_schedule",
     "water_fill_alloc",

@@ -1,4 +1,4 @@
-"""Replica-Deletion task assignment (paper Sec. III-C).
+"""Replica-Deletion task assignment (paper Sec. III-C), vectorized.
 
 Every task starts replicated on *all* of its available servers.  RD then
 iteratively picks the *target* server — largest estimated busy time
@@ -8,21 +8,47 @@ with the most copies to reduce the target's busy time by one slot.  Ties
 across target servers break by the largest *initial* busy time (paper
 Fig. 9); ties across equal-count tasks break by the cheapest surviving
 alternative (the paper leaves this tie random — we use the freedom to
-avoid stranding a task's last replica on an expensive server), then a
-seeded coin.  The deletion phase ends when some target server holds only
-sole-copy tasks (its busy time can no longer drop, so neither can the
-job's completion time).  A final phase dedups the remaining multi-copy
-tasks off the busiest holders so each task runs exactly once.
+avoid stranding a task's last replica on an expensive server), then by a
+fixed order (surviving-server set, then group, then task index), so the
+whole algorithm is deterministic.  The deletion phase ends when some
+target server holds only sole-copy tasks (its busy time can no longer
+drop, so neither can the job's completion time).  A final phase dedups
+the remaining multi-copy tasks off the busiest holders so each task runs
+exactly once.
 
-Implementation notes:
+Implementation — class-compressed presence instead of per-task Python
+sets and lazy heaps.  The key observation: rows of the ``(n_tasks, M)``
+presence matrix repeat massively (all tasks of a group start with the
+*same* available-server row, and a strip moves a whole batch of them
+along the same row transition), and tasks sharing a row are exchangeable
+under every selection rule above — so the state is *equivalence classes*
+``(group, surviving servers) → member count`` rather than per-task rows:
 
-- target selection is numpy-vectorized over servers each iteration;
-- per-server task heaps are lazy max-heaps keyed by
-  ``(-count, min_alt_busy0, coin)`` with stale entries skipped;
-- ``multi_on[m]`` tracks how many multi-copy tasks server ``m`` still
-  holds, so the final phase can mask busiest-server selection in O(M).
+- replica count and the cheapest-alternative tie-break are per-class
+  scalars; server loads, busy estimates and multi-copy populations are
+  delta-updated O(M) vectors, bucketed per server by replica count;
+- deleting ``k`` replicas from a class is O(1): its member count drops
+  by ``k`` and the ``servers∖{target}`` class's count rises by ``k``
+  (destination classes are pointer-cached per stripped server);
+- a strip of server ``m`` walks its count buckets descending, classes
+  inside a bucket in ``(alt, servers, group)`` order — candidate keys
+  are static within the strip (deleted members leave ``m``), so this is
+  exactly the reference's sequential max-key pop order, and the walk
+  order is cached until an activation invalidates it;
+- target selection per sweep is the reference's lazy max-heap over ≤M
+  entries; the dedup phase precomputes each busy level's static
+  ``(busy0, id)`` strip order and only re-checks candidates for dropout
+  (multi-copy population hitting zero) at their turn.
 
-Complexity O(M²·n log n) worst case, matching the paper's analysis.
+The selection sequence is a deterministic function of the state, so this
+implementation is *assignment-identical* to the executable specification
+in :mod:`repro.core.rd_reference`; the test suite checks that on seeded
+instances.  Work per strip is O(active classes on the target) with tiny
+constants instead of O(heap ops × log n) Python-object churn per task,
+which cuts per-arrival overhead by ≥10× at policy-matrix scale.
+
+``seed`` is retained for API compatibility; both implementations are
+deterministic and ignore it.
 """
 
 from __future__ import annotations
@@ -38,215 +64,322 @@ __all__ = ["replica_deletion"]
 _BIG = 1 << 30
 
 
-class _RDState:
-    def __init__(self, problem: AssignmentProblem, rng: np.random.Generator):
-        self.rng = rng
-        self.busy0 = problem.busy.astype(np.int64)
-        self.mu = problem.mu.astype(np.int64)
-        n_servers = problem.n_servers
-        self.task_group: list[int] = []
-        for k, g in enumerate(problem.groups):
-            self.task_group.extend([k] * g.size)
-        n = len(self.task_group)
-        self.count = np.zeros(n, dtype=np.int64)
-        self.present: list[set[int]] = [set() for _ in range(n)]
-        self.on_server: list[set[int]] = [set() for _ in range(n_servers)]
-        t = 0
-        for g in problem.groups:
-            for _ in range(g.size):
-                self.count[t] = len(g.servers)
-                self.present[t] = set(g.servers)
-                for m in g.servers:
-                    self.on_server[m].add(t)
-                t += 1
-        self.load = np.array([len(s) for s in self.on_server], dtype=np.int64)
-        self.busy_est = self.busy0 + -(-self.load // self.mu)  # incremental
-        self.multi_on = np.zeros(n_servers, dtype=np.int64)
-        for m in range(n_servers):
-            self.multi_on[m] = sum(1 for t in self.on_server[m] if self.count[t] > 1)
-        self._alt_best: list[tuple[int, int, int]] = [(-1, _BIG, _BIG)] * n
-        for t in range(n):
-            self._refresh_alt(t)
-        self.task_heaps: list[list[tuple[tuple[int, int, float], int]]] = [
-            [] for _ in range(n_servers)
-        ]
-        for m in range(n_servers):
-            for t in self.on_server[m]:
-                heapq.heappush(self.task_heaps[m], (self._key(t, m), t))
-        # peek_max_count cache; a deletion of task t only invalidates t's
-        # holders, so most target scans are dict lookups
-        self.peek_cache: dict[int, int] = {}
+class _Cls:
+    """One equivalence class of tasks: same group, same surviving servers.
 
-    def _refresh_alt(self, t: int) -> None:
-        """Cache the two cheapest holders of t by initial busy time, so
-        ``_alt`` is O(1) (recomputed only when t loses a holder)."""
+    Members are anonymous (exchangeable), so the class is just a size.
+    ``dest`` caches the ``servers∖{m}`` class per stripped server.
+    """
+
+    __slots__ = ("group", "servers", "count", "size", "b1", "m1", "b2", "dest")
+
+    def __init__(self, group: int, servers: tuple[int, ...]):
+        self.group = group
+        self.servers = servers
+        self.count = len(servers)
+        self.size = 0
+        self.dest: dict[int, _Cls] = {}
+        self.m1 = -1  # alt tie-break computed lazily on first use
+        self.b1 = -1
+        self.b2 = -1
+
+    def _compute_alt(self, busy0: list[int]) -> None:
+        """Two cheapest holders by initial busy time, for the alt
+        tie-break (deferred: many short-lived classes are never sorted)."""
         m1 = -1
         b1 = b2 = _BIG
-        for m in self.present[t]:
-            b = int(self.busy0[m])
+        for m in self.servers:
+            b = busy0[m]
             if b < b1:
                 b2 = b1
                 m1, b1 = m, b
             elif b < b2:
                 b2 = b
-        self._alt_best[t] = (m1, b1, b2)
+        self.m1 = m1
+        self.b1 = b1
+        self.b2 = b2
 
-    def _alt(self, t: int, m: int) -> int:
-        """Initial busy time of the cheapest *other* holder of task t."""
-        m1, b1, b2 = self._alt_best[t]
-        return b2 if m == m1 else b1
+    def alt(self, m: int) -> int:
+        """Initial busy time of the cheapest *other* holder (``_BIG`` for
+        sole-copy classes).  When the minimum is duplicated ``b2 == b1``,
+        so any argmin representative gives the same value."""
+        return self.b2 if m == self.m1 else self.b1
 
-    def _key(self, t: int, m: int) -> tuple[int, int, float]:
-        return (-int(self.count[t]), self._alt(t, m), self.rng.random())
 
-    def busy_vec(self) -> np.ndarray:
-        """b_m + ⌈load_m/μ_m⌉ for all servers (maintained incrementally:
-        deletions only change the stripped server's own load)."""
-        return self.busy_est
+class _RDClasses:
+    """Class-compressed RD state with delta-updated server vectors.
 
-    def _settle(self, m: int, *, strict: bool) -> None:
-        """Drop/refresh stale heap head for server m.
+    Per-server scalar state lives in plain Python lists — every strip
+    touches a handful of scalars, and list indexing beats numpy scalar
+    indexing by ~5× at that granularity.
+    """
 
-        Counts only decrease and ``alt`` only increases over time, so stale
-        entries are always *optimistic* (sort earlier than deserved): fixing
-        them by re-pushing a corrected key is safe.  ``strict=False`` only
-        validates the count — enough for :meth:`peek_max_count` and ~3×
-        cheaper, since ``alt`` never affects the max count.
-        """
-        h = self.task_heaps[m]
-        while h:
-            (negc, alt, _), t = h[0]
-            if m not in self.present[t]:
-                heapq.heappop(h)
-                continue
-            c = int(self.count[t])
-            if -negc != c:
-                heapq.heappop(h)
-                heapq.heappush(h, ((-c, self._alt(t, m), self.rng.random()), t))
-                continue
-            if strict and alt != self._alt(t, m):
-                heapq.heappop(h)
-                heapq.heappush(h, ((-c, self._alt(t, m), self.rng.random()), t))
-                continue
-            return
+    def __init__(self, problem: AssignmentProblem):
+        self.busy0 = [int(b) for b in problem.busy]
+        self.mu = [int(v) for v in problem.mu]
+        m_servers = problem.n_servers
+        self.m_servers = m_servers
+        self.n = problem.n_tasks
+        self.classes: dict[tuple[int, tuple[int, ...]], _Cls] = {}
+        # buckets[m][count] -> active classes with that replica count on m
+        # (count-indexed arrays, so walking counts descending is a plain
+        # downward scan); order[m][count] caches the bucket's walk order
+        # (keys are static per class, so only an activation invalidates it)
+        self.max_count = max((len(g.servers) for g in problem.groups), default=1)
+        self.buckets: list[list[set[_Cls] | None]] = [
+            [None] * (self.max_count + 1) for _ in range(m_servers)
+        ]
+        self.order: list[list[list[_Cls] | None]] = [
+            [None] * (self.max_count + 1) for _ in range(m_servers)
+        ]
+        self.load = [0] * m_servers
+        self.multi_on = [0] * m_servers
+        self.peek = [self.max_count] * m_servers  # lazy-decreasing pointer
+        for k, g in enumerate(problem.groups):
+            key = (k, g.servers)
+            c = self.classes.get(key)
+            if c is None:
+                c = _Cls(k, g.servers)
+                self.classes[key] = c
+                self._activate(c)
+            c.size += g.size
+            for m in g.servers:
+                self.load[m] += g.size
+                if c.count > 1:
+                    self.multi_on[m] += g.size
+        self.busy_est = [
+            b + -(-ld // mu) for b, ld, mu in zip(self.busy0, self.load, self.mu)
+        ]
+        # servers whose multi-copy population has hit zero *while holding
+        # replicas*: the deletion phase's exit condition only ever needs
+        # to look at these (zero-load servers can never trigger it)
+        self.zero_multi: set[int] = {
+            m
+            for m in range(m_servers)
+            if self.multi_on[m] == 0 and self.load[m] > 0
+        }
+
+    def _activate(self, c: _Cls) -> None:
+        cnt = c.count
+        buckets = self.buckets
+        order = self.order
+        for s in c.servers:
+            members = buckets[s][cnt]
+            if members is None:
+                buckets[s][cnt] = {c}
+            else:
+                members.add(c)
+            order[s][cnt] = None  # invalidate cached walk order
+
+    def _deactivate(self, c: _Cls) -> None:
+        # lazy: drained classes stay in cached walk orders and are skipped
+        # by their size == 0 until the next rebuild
+        cnt = c.count
+        buckets = self.buckets
+        for s in c.servers:
+            buckets[s][cnt].discard(c)
 
     def peek_max_count(self, m: int) -> int:
-        cached = self.peek_cache.get(m)
-        if cached is not None:
-            return cached
-        self._settle(m, strict=False)
-        h = self.task_heaps[m]
-        val = -h[0][0][0] if h else 0
-        self.peek_cache[m] = val
-        return val
+        """Max replica count among active classes on ``m``.
 
-    def pop_max_task(self, m: int) -> int | None:
-        self._settle(m, strict=True)
-        h = self.task_heaps[m]
-        if not h:
-            return None
-        return heapq.heappop(h)[1]
+        Monotone non-increasing over the run: an activation on ``m`` is
+        always a ``count-1`` spin-off of a class that was on ``m`` at the
+        same moment, so it can never raise the max — which makes the
+        cached value a lazily-decreasing pointer (amortized O(1))."""
+        buckets_m = self.buckets[m]
+        p = self.peek[m]
+        while p > 0 and not buckets_m[p]:
+            p -= 1
+        self.peek[m] = p
+        return p
 
-    def delete_replica(self, t: int, m: int) -> None:
-        """Heap entries for t's other holders go stale; peek/pop fix them
-        lazily (cheaper than eagerly re-pushing ~count entries per delete)."""
-        was_multi = self.count[t] > 1
-        self.present[t].discard(m)
-        self.on_server[m].discard(t)
-        self.load[m] -= 1
-        self.count[t] -= 1
-        self._refresh_alt(t)
-        if was_multi:
-            self.multi_on[m] -= 1
-        self.peek_cache.pop(m, None)
-        for m2 in self.present[t]:
-            self.peek_cache.pop(m2, None)
-        if self.count[t] == 1:
-            (m_last,) = self.present[t]
-            self.multi_on[m_last] -= 1
+    def _move(self, c: _Cls, m: int, k: int) -> None:
+        """Delete k replicas of class ``c`` from server ``m``, re-homing
+        the members in the ``servers∖{m}`` class — O(1)."""
+        size = c.size - k
+        c.size = size
+        buckets = self.buckets
+        if size == 0:  # deactivate (inlined: this is the hot path)
+            cnt = c.count
+            for s in c.servers:
+                buckets[s][cnt].discard(c)
+        d = c.dest.get(m)
+        if d is None:
+            dest_servers = tuple(s for s in c.servers if s != m)
+            dkey = (c.group, dest_servers)
+            d = self.classes.get(dkey)
+            if d is None:
+                d = _Cls(c.group, dest_servers)
+                self.classes[dkey] = d
+            c.dest[m] = d
+        if d.size == 0:  # fresh or previously drained: (re)activate
+            cnt = d.count
+            order = self.order
+            for s in d.servers:
+                members = buckets[s][cnt]
+                if members is None:
+                    buckets[s][cnt] = {d}
+                else:
+                    members.add(d)
+                order[s][cnt] = None  # invalidate cached walk order
+        d.size += k
+        multi_on = self.multi_on
+        multi_on[m] -= k  # every deleted member was multi-copy
+        if multi_on[m] == 0:
+            self.zero_multi.add(m)
+        if c.count == 2:  # members became sole-copy on their last holder
+            last = d.servers[0]
+            multi_on[last] -= k
+            if multi_on[last] == 0:
+                self.zero_multi.add(last)
 
-    def strip(self, m_star: int) -> int:
-        """Delete enough multi-copy replicas from ``m_star`` to drop one
-        busy slot (``((load-1) mod μ)+1`` — the paper's "up to μ"); returns
-        number removed."""
-        mu = int(self.mu[m_star])
-        quota = ((int(self.load[m_star]) - 1) % mu) + 1
+    def strip(self, m: int) -> int:
+        """Delete up to ``((load-1) mod μ)+1`` multi-copy replicas from
+        ``m`` — most copies first, ties by cheapest surviving alternative,
+        then the fixed ``(servers, group)`` class order; returns the
+        number removed.
+
+        Candidate class keys are static within the strip (deleted members
+        leave ``m``), so the sequential max-key pops of the reference
+        collapse into one walk over count buckets (descending) and class
+        order (ascending), taking prefixes.
+        """
+        quota = ((self.load[m] - 1) % self.mu[m]) + 1
         removed = 0
-        while removed < quota and self.peek_max_count(m_star) >= 2:
-            t = self.pop_max_task(m_star)
-            if t is None:
+        buckets_m = self.buckets[m]
+        order_m = self.order[m]
+        move = self._move
+        for cnt in range(self.peek_max_count(m), 1, -1):
+            if removed >= quota:
                 break
-            self.delete_replica(t, m_star)
-            removed += 1
+            bucket = buckets_m[cnt]
+            if not bucket:
+                continue
+            walk = order_m[cnt]
+            if walk is None:
+                busy0 = self.busy0
+                for c in bucket:
+                    if c.b1 < 0:
+                        c._compute_alt(busy0)
+                walk = sorted(
+                    bucket, key=lambda c: (c.alt(m), c.servers, c.group)
+                )
+                order_m[cnt] = walk
+            dead = 0  # leading drained classes since the order was cached
+            for c in walk:
+                if c.size == 0:
+                    dead += 1
+                    continue
+                if removed >= quota:
+                    break
+                k = quota - removed
+                size = c.size
+                if size < k:
+                    k = size
+                move(c, m, k)
+                removed += k
+                if c.size == 0:
+                    dead += 1
+                else:
+                    break  # quota exhausted at a live class
+            if dead:
+                del walk[:dead]
         if removed:
-            self.busy_est[m_star] = self.busy0[m_star] + -(
-                -int(self.load[m_star]) // int(self.mu[m_star])
-            )
+            self.load[m] -= removed
+            self.busy_est[m] = self.busy0[m] + -(-self.load[m] // self.mu[m])
         return removed
 
 
 def replica_deletion(problem: AssignmentProblem, seed: int = 0) -> Assignment:
-    rng = np.random.default_rng(seed)
-    st = _RDState(problem, rng)
+    del seed  # deterministic; retained for API compatibility
+    st = _RDClasses(problem)
+    if st.n == 0:
+        result = Assignment(alloc=[], phi=0)
+        result.phi = result.realized_phi(problem)
+        return result
+    m_all = range(st.m_servers)
+    load, busy_est, busy0, multi_on = st.load, st.busy_est, st.busy0, st.multi_on
 
     # ---- deletion phase --------------------------------------------------
     # Per level sweep: all servers tied at the max busy level are stripped
     # one busy-slot each, in descending (max replica count, initial busy)
-    # order; the order heap is validated lazily at pop time, so counts are
-    # always fresh when a target is actually stripped.
+    # order with server id breaking exact ties; a lazy heap re-ranks a
+    # target when its peek count moved, so selection always uses *current*
+    # replica counts (stale entries are optimistic — counts only drop).
     done = False
     while not done:
-        held = st.load > 0
-        best = int(st.busy_est[held].max())
-        tmask = held & (st.busy_est == best)
+        best = -1
+        targets: list[int] = []
+        for m in m_all:  # single pass: max level + its servers
+            if load[m] > 0:
+                b = busy_est[m]
+                if b > best:
+                    best = b
+                    targets = [m]
+                elif b == best:
+                    targets.append(m)
         # exit: some target holds only sole-copy tasks (multi_on == 0) →
         # the max estimated busy time cannot be reduced any further
-        if bool((tmask & (st.multi_on == 0)).any()):
+        if any(multi_on[m] == 0 for m in targets):
             break
-        targets = np.flatnonzero(tmask)
-        heap = [
-            (-st.peek_max_count(int(m)), -int(st.busy0[m]), rng.random(), int(m))
-            for m in targets
-        ]
+        heap = [(-st.peek_max_count(m), -busy0[m], m) for m in targets]
         heapq.heapify(heap)
         while heap:
-            negc, negb0, coin, m = heapq.heappop(heap)
-            if st.load[m] <= 0 or int(st.busy_est[m]) != best:
+            negc, negb0, m = heapq.heappop(heap)
+            if load[m] <= 0 or busy_est[m] != best:
                 continue  # already stripped below this level
             c = st.peek_max_count(m)
             if -negc != c:  # count moved since push; re-rank
-                heapq.heappush(heap, (-c, negb0, coin, m))
+                heapq.heappush(heap, (-c, negb0, m))
                 continue
             if c <= 1 or st.strip(m) == 0:
                 done = True
                 break
-            # deletions may have drained another target's multi-copy tasks
-            tmask = (st.load > 0) & (st.busy_est == best)
-            if bool((tmask & (st.multi_on == 0)).any()):
+            # deletions may have drained another target's multi-copy tasks;
+            # only servers whose multi population just hit zero can trigger
+            if any(
+                busy_est[z] == best and load[z] > 0 for z in st.zero_multi
+            ):
                 done = True
                 break
 
-    # ---- final dedup phase -------------------------------------------------
-    # Each remaining multi-copy task keeps exactly one replica; replicas are
-    # stripped from the busiest holders first to keep loads balanced.
+    # ---- final dedup phase -----------------------------------------------
+    # Each remaining multi-copy task keeps exactly one replica; replicas
+    # are stripped from the busiest holders first to keep loads balanced.
+    # Within one busy level every candidate's (busy_est, busy0, id) key is
+    # static, so the level's strip order is precomputed and candidates are
+    # only re-checked for dropout (multi_on → 0) at their turn.
     while True:
-        mask = st.multi_on > 0
-        if not mask.any():
+        best = -1
+        level = []
+        for m in m_all:  # single pass: max level among multi-copy holders
+            if multi_on[m] > 0:
+                b = busy_est[m]
+                if b > best:
+                    best = b
+                    level = [m]
+                elif b == best:
+                    level.append(m)
+        if best < 0:
             break
-        busy = st.busy_vec()
-        cand = np.flatnonzero(mask)
-        order = np.lexsort((rng.random(cand.size), st.busy0[cand], busy[cand]))
-        m_star = int(cand[order[-1]])
-        removed = st.strip(m_star)
-        assert removed > 0, "masked server must hold a multi-copy task"
+        level.sort(key=lambda m: (busy0[m], m), reverse=True)
+        for m_star in level:
+            if multi_on[m_star] <= 0 or busy_est[m_star] != best:
+                continue
+            removed = st.strip(m_star)
+            assert removed > 0, "masked server must hold a multi-copy task"
 
-    # ---- build assignment --------------------------------------------------
+    # ---- build assignment ------------------------------------------------
     alloc: list[dict[int, int]] = [dict() for _ in problem.groups]
-    for t in range(len(st.count)):
-        assert st.count[t] == 1, "dedup must leave exactly one replica"
-        (m,) = st.present[t]
-        k = st.task_group[t]
-        alloc[k][m] = alloc[k].get(m, 0) + 1
+    placed = 0
+    for (k, servers), c in st.classes.items():
+        if c.size == 0:
+            continue
+        assert c.count == 1, "dedup must leave exactly one replica"
+        (m,) = servers
+        alloc[k][m] = alloc[k].get(m, 0) + int(c.size)
+        placed += int(c.size)
+    assert placed == st.n, "class bookkeeping lost tasks"
     result = Assignment(alloc=alloc, phi=0)
     result.phi = result.realized_phi(problem)
     result.validate(problem)

@@ -43,6 +43,7 @@ def rebalance_1opt(
         return int(busy0[m] + -(-loads[m] // mu[m]))
 
     fin_vec = np.array([fin(m) for m in range(n)], dtype=np.int64)
+    group_srv = [np.asarray(g.servers, dtype=np.int64) for g in problem.groups]
     for _ in range(max_rounds):
         used = loads > 0
         if not used.any():
@@ -54,31 +55,30 @@ def rebalance_1opt(
             # tasks to shed: enough to drop one slot at the source
             shed = ((int(loads[m_src]) - 1) % int(mu[m_src])) + 1
             # candidate (group, destination) pairs: any group with tasks on
-            # m_src may move to another available server that stays < top
+            # m_src may move to another available server that stays < top;
+            # all of a group's destinations are scored in one vector op and
+            # the first valid one (in available-server order) is taken
             for k, per in enumerate(alloc):
                 have = per.get(int(m_src), 0)
                 if have <= 0:
                     continue
                 take = min(have, shed)
-                for m_dst in problem.groups[k].servers:
-                    if m_dst == m_src:
-                        continue
-                    new_fin = int(
-                        busy0[m_dst] + -(-(loads[m_dst] + take) // mu[m_dst])
-                    )
-                    if new_fin < top:
-                        per[int(m_src)] = have - take
-                        if per[int(m_src)] == 0:
-                            del per[int(m_src)]
-                        per[m_dst] = per.get(m_dst, 0) + take
-                        loads[m_src] -= take
-                        loads[m_dst] += take
-                        fin_vec[m_src] = fin(int(m_src))
-                        fin_vec[m_dst] = fin(m_dst)
-                        moved = True
-                        break
-                if moved:
-                    break
+                srv = group_srv[k]
+                new_fin = busy0[srv] + -(-(loads[srv] + take) // mu[srv])
+                valid = (new_fin < top) & (srv != m_src)
+                if not valid.any():
+                    continue
+                m_dst = int(srv[np.argmax(valid)])
+                per[int(m_src)] = have - take
+                if per[int(m_src)] == 0:
+                    del per[int(m_src)]
+                per[m_dst] = per.get(m_dst, 0) + take
+                loads[m_src] -= take
+                loads[m_dst] += take
+                fin_vec[m_src] = fin(int(m_src))
+                fin_vec[m_dst] = fin(m_dst)
+                moved = True
+                break
             if moved:
                 break
         if not moved:

@@ -31,6 +31,7 @@ from .wf import water_filling, wf_phi
 __all__ = [
     "OutstandingJob",
     "ReorderStats",
+    "commit_busy",
     "reorder_schedule",
     "priority_schedule",
 ]
@@ -54,7 +55,7 @@ class ReorderStats:
     positions: int = 0
 
 
-def _commit_busy(
+def commit_busy(
     busy: np.ndarray, assignment: Assignment, mu: np.ndarray, n_servers: int
 ) -> np.ndarray:
     """eq. 2 commit: raise each used server's busy time by ⌈assigned/μ⌉."""
@@ -63,6 +64,9 @@ def _commit_busy(
     busy = busy.copy()
     busy[used] += -(-loads[used] // mu[used])
     return busy
+
+
+_commit_busy = commit_busy  # historical private name
 
 
 def reorder_schedule(

@@ -27,8 +27,11 @@ __all__ = [
     "water_fill_alloc",
     "water_fill_groups",
     "water_fill_batch",
+    "water_fill_chain",
     "water_filling_jax",
     "water_filling_jax_batch",
+    "water_filling_jax_chain",
+    "check_group_capacity",
 ]
 
 _BIG = jnp.int32(2**30)
@@ -119,12 +122,57 @@ def water_fill_groups(
     return alloc, levels, phi
 
 
-# batched over B independent arrival instances — one device dispatch
-# places every concurrently-arriving job (the engine's burst path)
+# batched over B *independent* arrival instances (per-problem busy
+# snapshots). NOTE: results are only mutually consistent if the problems
+# target disjoint queues — same-slot admission must use the chained scan
+# below, which commits eq. 2 between jobs.
 water_fill_batch = jax.vmap(water_fill_groups, in_axes=(0, 0, 0, 0))
+
+
+def water_fill_chain(
+    busy: jax.Array,
+    mu: jax.Array,
+    group_mask: jax.Array,
+    demands: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sequential admission of B jobs in one scan, carrying busy levels.
+
+    Unlike :data:`water_fill_batch` (independent problems, shared stale
+    busy snapshot), the chain commits eq. 2 *between* jobs: job ``i+1``
+    sees ``b_m + ⌈load_m^i/μ_m^i⌉`` exactly as if the jobs were admitted
+    one at a time — so a same-slot burst collapses to one device dispatch
+    with bit-identical results to per-arrival admission.
+
+    Args:
+      busy: (M,) int32 busy levels before the first job of the burst.
+      mu: (B, M) int32 per-job per-server throughputs.
+      group_mask: (B, K, M) bool availability; padded jobs are all-False.
+      demands: (B, K) int32 task counts; padded jobs/groups are 0.
+
+    Returns:
+      alloc: (B, K, M) int32, levels-free per-job allocations.
+      phi: (B,) int32 per-job ``Φ_c`` (max water level over its groups).
+      busy_out: (M,) int32 busy levels after the whole burst.
+    """
+
+    def job_step(b, inputs):
+        mu_j, mask_j, d_j = inputs
+        alloc_j, _, phi_j = water_fill_groups(b, mu_j, mask_j, d_j)
+        loads = alloc_j.sum(axis=0)
+        b_next = b + jnp.where(loads > 0, _ceil_div(loads, mu_j), 0)  # eq. 2
+        return b_next, (alloc_j, phi_j)
+
+    busy_out, (alloc, phi) = jax.lax.scan(
+        job_step,
+        busy.astype(jnp.int32),
+        (mu.astype(jnp.int32), group_mask, demands.astype(jnp.int32)),
+    )
+    return alloc, phi, busy_out
+
 
 _wf_groups_jit = jax.jit(water_fill_groups)
 _wf_batch_jit = jax.jit(water_fill_batch)
+_wf_chain_jit = jax.jit(water_fill_chain)
 
 
 def _pad_k(k: int) -> int:
@@ -134,6 +182,35 @@ def _pad_k(k: int) -> int:
     while p < k:
         p *= 2
     return p
+
+
+def check_group_capacity(
+    mu: np.ndarray, masks: np.ndarray, demands: np.ndarray
+) -> None:
+    """Host-path guard: a group with positive demand must have a non-empty
+    mask and positive total capacity, otherwise the device water level
+    would silently return a ``_BIG``-derived garbage value.
+
+    ``mu`` is (M,) or (B, M); ``masks`` (K, M) or (B, K, M); ``demands``
+    (K,) or (B, K) — raises :class:`ValueError` on the first violation.
+    """
+    mu = np.atleast_2d(np.asarray(mu))
+    masks = np.asarray(masks)
+    demands = np.atleast_2d(np.asarray(demands))
+    masks = masks.reshape((demands.shape[0], demands.shape[1], -1))
+    cap = (masks * mu[:, None, :]).sum(axis=-1)
+    bad = (demands > 0) & (cap <= 0)
+    if bad.any():
+        i, k = map(int, np.argwhere(bad)[0])
+        reason = (
+            "an all-False availability mask"
+            if not masks[i, k].any()
+            else "zero total capacity on its available servers"
+        )
+        raise ValueError(
+            f"infeasible water-fill group (problem {i}, group {k}): "
+            f"demand {int(demands[i, k])} with {reason}"
+        )
 
 
 def _dense_inputs(
@@ -151,6 +228,7 @@ def _dense_inputs(
         for k, g in enumerate(prob.groups):
             masks[i, k, list(g.servers)] = True
             demands[i, k] = g.size
+    check_group_capacity(mu, masks, demands)
     return busy, mu, masks, demands
 
 
@@ -185,12 +263,13 @@ def water_filling_jax(problem: AssignmentProblem) -> Assignment:
 
 
 def water_filling_jax_batch(problems: list[AssignmentProblem]) -> list[Assignment]:
-    """Batched WF for many concurrent arrivals: one vmapped device call.
+    """Batched WF over *independent* problems: one vmapped device call.
 
     All problems must share the same server count (one cluster); busy
-    times are per-problem, so the results are only mutually consistent if
-    the callers' jobs target disjoint queues or the caller re-batches per
-    wave — exactly the engine's same-slot arrival burst.
+    times are per-problem and are NOT carried across jobs, so the results
+    are only mutually consistent if the problems target disjoint queues.
+    For same-slot arrival bursts — where each job must see the busy times
+    left by its predecessors — use :func:`water_filling_jax_chain`.
     """
     if not problems:
         return []
@@ -201,6 +280,54 @@ def water_filling_jax_batch(problems: list[AssignmentProblem]) -> list[Assignmen
     busy, mu, masks, demands = _dense_inputs(problems, k_pad)
     alloc, _, phi = _wf_batch_jit(
         jnp.asarray(busy), jnp.asarray(mu), jnp.asarray(masks), jnp.asarray(demands)
+    )
+    alloc = np.asarray(alloc)
+    phi = np.asarray(phi)
+    return [
+        _to_assignment(p, alloc[i], int(phi[i])) for i, p in enumerate(problems)
+    ]
+
+
+def water_filling_jax_chain(
+    problems: list[AssignmentProblem],
+) -> list[Assignment]:
+    """Admit many same-slot arrivals in one chained device dispatch.
+
+    Every problem must share one cluster (same server count) and carry the
+    *same* pre-burst busy vector; the scan commits eq. 2 between jobs, so
+    the returned assignments (and their ``Φ_c``) are bit-identical to
+    calling :func:`water_filling_jax` per job with busy times re-read from
+    the cluster after each enqueue — the engine's sequential admit path.
+    """
+    if not problems:
+        return []
+    m = problems[0].n_servers
+    if any(p.n_servers != m for p in problems):
+        raise ValueError("chained WF requires a single cluster size")
+    if any(not p.groups for p in problems):
+        raise ValueError("chained WF requires non-empty problems")
+    base = problems[0].busy
+    if any(
+        p.busy is not base and not np.array_equal(p.busy, base)
+        for p in problems[1:]
+    ):
+        # the scan re-commits eq. 2 between jobs itself; a caller passing
+        # per-job evolved busy vectors would get them double-counted
+        raise ValueError(
+            "chained WF requires every problem to carry the same pre-burst "
+            "busy vector (eq. 2 is committed inside the scan)"
+        )
+    k_pad = _pad_k(max(len(p.groups) for p in problems))
+    busy, mu, masks, demands = _dense_inputs(problems, k_pad)
+    b_pad = _pad_k(len(problems))  # pad jobs too: O(log B) recompiles
+    if b_pad > len(problems):
+        pad = b_pad - len(problems)
+        mu = np.concatenate([mu, np.ones((pad, m), np.int32)])
+        masks = np.concatenate([masks, np.zeros((pad, k_pad, m), bool)])
+        demands = np.concatenate([demands, np.zeros((pad, k_pad), np.int32)])
+    alloc, phi, _ = _wf_chain_jit(
+        jnp.asarray(busy[0]), jnp.asarray(mu), jnp.asarray(masks),
+        jnp.asarray(demands),
     )
     alloc = np.asarray(alloc)
     phi = np.asarray(phi)

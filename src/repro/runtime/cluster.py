@@ -5,6 +5,15 @@ are always keyed by the job's *original* group index, so locality sets
 (``job.groups[g].servers``) stay correct across arbitrarily many reorders
 and fault-driven reassignments.  :meth:`ClusterState.assert_invariant`
 makes the invariant executable for tests.
+
+Busy times are maintained *incrementally*: ``enqueue`` adds each new
+segment's ``⌈o/μ⌉`` cost, ``process_slot`` subtracts the ceiling delta as
+the head segment drains, and queue-structure mutations (``clear_queues``,
+``mark_failed``, ``fail_server``) adjust or zero the affected servers.
+Capacity changes (slowdown/speedup via :meth:`invalidate_mu`) mark the
+vector stale and the next :meth:`busy_times` call recomputes it from the
+queues.  With ``debug=True`` every :meth:`busy_times` call cross-checks
+the incremental vector against the O(queued segments) rescan.
 """
 
 from __future__ import annotations
@@ -55,9 +64,10 @@ class ClusterState:
     ``⌈o_m^h/μ_m^h⌉`` slots — eq. 2 holds *by construction*.
     """
 
-    def __init__(self, n_servers: int, jobs: dict[int, Job]):
+    def __init__(self, n_servers: int, jobs: dict[int, Job], *, debug: bool = False):
         self.n_servers = n_servers
         self.jobs = jobs
+        self.debug = debug
         self.queues: list[deque[QueueSegment]] = [deque() for _ in range(n_servers)]
         self.alive = np.ones(n_servers, dtype=bool)
         self.slow = np.ones(n_servers, dtype=np.float64)
@@ -65,6 +75,8 @@ class ClusterState:
         self.failed: list[int] = []
         self.reassigned = 0
         self._mu_cache: dict[int, np.ndarray] = {}
+        self._busy = np.zeros(n_servers, dtype=np.int64)
+        self._busy_stale = False
 
     # ---- capacity & busy time -------------------------------------------
 
@@ -76,21 +88,58 @@ class ClusterState:
         return cached
 
     def invalidate_mu(self) -> None:
+        """Per-job capacities changed (slowdown/speedup): every queued
+        segment's ceiling cost changes with them, so the incremental busy
+        vector is stale until the next :meth:`busy_times` rescan."""
         self._mu_cache.clear()
+        self._busy_stale = True
 
-    def busy_times(self) -> np.ndarray:
-        """eq. 2: b_m = Σ_h ⌈o_m^h / μ_m^h⌉ over queued segments."""
+    def _segment_cost(self, seg: QueueSegment, m: int) -> int:
+        mu = int(self.effective_mu(self.jobs[seg.job_id])[m])
+        return -(-seg.total // mu)
+
+    def _rescan_busy(self) -> np.ndarray:
+        """eq. 2 from scratch: b_m = Σ_h ⌈o_m^h / μ_m^h⌉ over queued
+        segments (the reference the incremental vector is checked against)."""
         busy = np.zeros(self.n_servers, dtype=np.int64)
         for m in range(self.n_servers):
             if not self.alive[m]:
                 continue
             for seg in self.queues[m]:
-                mu = self.effective_mu(self.jobs[seg.job_id])[m]
-                busy[m] += -(-seg.total // mu)
+                busy[m] += self._segment_cost(seg, m)
         return busy
+
+    def busy_times(self) -> np.ndarray:
+        """eq. 2 busy-time vector, maintained incrementally (O(M) here)."""
+        if self._busy_stale:
+            self._busy = self._rescan_busy()
+            self._busy_stale = False
+        if self.debug:
+            rescan = self._rescan_busy()
+            if not np.array_equal(self._busy, rescan):
+                raise AssertionError(
+                    f"incremental busy times diverged from rescan: "
+                    f"{self._busy.tolist()} != {rescan.tolist()}"
+                )
+        return self._busy.copy()
 
     def live_servers(self, group: TaskGroup) -> tuple[int, ...]:
         return tuple(m for m in group.servers if self.alive[m])
+
+    # ---- liveness --------------------------------------------------------
+
+    def fail_server(self, m: int) -> list[QueueSegment]:
+        """Mark ``m`` dead and drain its queue; returns stranded segments."""
+        self.alive[m] = False
+        stranded = list(self.queues[m])
+        self.queues[m].clear()
+        self._busy[m] = 0  # dead servers contribute no busy time
+        return stranded
+
+    def recover_server(self, m: int) -> None:
+        self.alive[m] = True
+        # queue was drained at failure, so the busy contribution is zero
+        assert not self.queues[m], "recovered server has a non-empty queue"
 
     # ---- job bookkeeping -------------------------------------------------
 
@@ -99,10 +148,12 @@ class ClusterState:
             self.failed.append(job_id)
         self.remaining.pop(job_id, None)
         # purge zombie segments so queues don't process unaccounted tasks
-        for q in self.queues:
+        for m, q in enumerate(self.queues):
             for seg in list(q):
                 if seg.job_id == job_id:
                     q.remove(seg)
+                    if not self._busy_stale and self.alive[m]:
+                        self._busy[m] -= self._segment_cost(seg, m)
 
     def enqueue(self, job_id: int, assignment: Assignment, gids: list[int]) -> None:
         """Append assignment to queues; alloc index i corresponds to
@@ -116,10 +167,15 @@ class ClusterState:
                 bucket = per_server.setdefault(m, {})
                 bucket[g] = bucket.get(g, 0) + cnt
         for m, per_group in per_server.items():
-            self.queues[m].append(QueueSegment(job_id, per_group))
+            seg = QueueSegment(job_id, per_group)
+            self.queues[m].append(seg)
+            if not self._busy_stale and self.alive[m]:
+                self._busy[m] += self._segment_cost(seg, m)
 
     def clear_queues(self) -> None:
         self.queues = [deque() for _ in range(self.n_servers)]
+        self._busy = np.zeros(self.n_servers, dtype=np.int64)
+        self._busy_stale = False
 
     # ---- projections onto alive servers ---------------------------------
 
@@ -181,7 +237,10 @@ class ClusterState:
                 continue
             seg = self.queues[m][0]
             mu = int(self.effective_mu(self.jobs[seg.job_id])[m])
+            cost_before = -(-seg.total // mu)
             taken = seg.take(mu)
+            if not self._busy_stale:
+                self._busy[m] -= cost_before - (-(-seg.total // mu))
             if seg.total == 0:
                 self.queues[m].popleft()
             if taken:
@@ -192,8 +251,9 @@ class ClusterState:
 
     def assert_invariant(self) -> None:
         """Every queued task sits on a server in its *original* group's
-        locality set, and per-job queued totals never exceed the remaining
-        unprocessed count (task conservation)."""
+        locality set, per-job queued totals never exceed the remaining
+        unprocessed count (task conservation), and the incremental busy
+        vector matches the eq. 2 rescan."""
         queued: dict[int, int] = {}
         for m in range(self.n_servers):
             for seg in self.queues[m]:
@@ -218,3 +278,9 @@ class ClusterState:
                 raise AssertionError(
                     f"job {job_id}: {total} tasks queued but only {rem} remain"
                 )
+        if not self._busy_stale and not np.array_equal(
+            self._busy, self._rescan_busy()
+        ):
+            raise AssertionError(
+                "incremental busy times diverged from the eq. 2 rescan"
+            )

@@ -27,16 +27,19 @@ from typing import Callable, Protocol, runtime_checkable
 
 from repro.core import (
     ALGORITHMS,
+    BATCH_ALGORITHMS,
     Assignment,
     AssignmentProblem,
     OutstandingJob,
     ReorderStats,
+    commit_busy,
     priority_schedule,
     reorder_schedule,
 )
 
 __all__ = [
     "AssignFn",
+    "BatchAssignFn",
     "SchedulingPolicy",
     "Policy",
     "ORDERINGS",
@@ -46,6 +49,7 @@ __all__ = [
 ]
 
 AssignFn = Callable[[AssignmentProblem], Assignment]
+BatchAssignFn = Callable[[list[AssignmentProblem]], list[Assignment]]
 
 ORDERINGS = ("fifo", "ocwf", "ocwf-acc", "setf")
 
@@ -63,6 +67,15 @@ class SchedulingPolicy(Protocol):
 
     def assign(self, problem: AssignmentProblem) -> Assignment:
         """Place one job's task groups given current busy times."""
+        ...
+
+    def assign_batch(self, problems: list[AssignmentProblem]) -> list[Assignment]:
+        """Place a same-slot burst of jobs, in order.
+
+        Every problem carries the *same* pre-burst busy vector; the
+        implementation must commit eq. 2 between jobs so the results are
+        identical to sequential per-arrival :meth:`assign` calls.
+        """
         ...
 
     def schedule(
@@ -83,6 +96,7 @@ class Policy:
     name: str
     assigner: AssignFn
     ordering: str = "fifo"
+    batch_assigner: BatchAssignFn | None = None
 
     def __post_init__(self) -> None:
         if self.ordering not in ORDERINGS:
@@ -96,6 +110,27 @@ class Policy:
 
     def assign(self, problem: AssignmentProblem) -> Assignment:
         return self.assigner(problem)
+
+    def assign_batch(self, problems: list[AssignmentProblem]) -> list[Assignment]:
+        """Admit a same-slot burst; identical to sequential :meth:`assign`.
+
+        With a registered ``batch_assigner`` (wf_jax) the whole burst is
+        one device dispatch; otherwise each job is assigned against the
+        busy vector left by its predecessors via the eq. 2 commit — the
+        same evolution :class:`~repro.runtime.cluster.ClusterState`
+        produces when jobs are enqueued one at a time.
+        """
+        if self.batch_assigner is not None and len(problems) > 1:
+            return self.batch_assigner(problems)
+        out: list[Assignment] = []
+        busy = None
+        for prob in problems:
+            if busy is not None:
+                prob = dataclasses.replace(prob, busy=busy)
+            assignment = self.assigner(prob)
+            out.append(assignment)
+            busy = commit_busy(prob.busy, assignment, prob.mu, prob.n_servers)
+        return out
 
     def schedule(
         self,
@@ -137,7 +172,12 @@ def make_policy(assign: str = "wf", ordering: str = "fifo") -> Policy:
     """Build a policy from registered names, e.g. ``make_policy("obta")``
     or ``make_policy("wf", "ocwf-acc")``."""
     name = assign if ordering == "fifo" else f"{assign}+{ordering}"
-    return Policy(name=name, assigner=get_assigner(assign), ordering=ordering)
+    return Policy(
+        name=name,
+        assigner=get_assigner(assign),
+        ordering=ordering,
+        batch_assigner=BATCH_ALGORITHMS.get(assign),
+    )
 
 
 def list_policies() -> list[str]:

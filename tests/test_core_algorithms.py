@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    AssignmentProblem,
     OutstandingJob,
     TaskGroup,
     group_tasks,
@@ -55,6 +56,47 @@ def test_heuristics_never_beat_optimum(problems):
 def test_rd_deterministic(problems):
     for prob in problems[:20]:
         assert replica_deletion(prob, 0).alloc == replica_deletion(prob, 0).alloc
+
+
+def test_rd_schedule_equivalent_to_reference(problems):
+    """The class-compressed RD must match the heap/set executable
+    specification assignment-for-assignment on seeded instances."""
+    from repro.core.rd_reference import replica_deletion_reference
+
+    for prob in problems[:40]:
+        fast = replica_deletion(prob, 0)
+        ref = replica_deletion_reference(prob, 0)
+        assert fast.alloc == ref.alloc
+        assert fast.phi == ref.phi
+
+
+def test_rd_equivalent_to_reference_on_dense_instances(rng):
+    """Smoke-scale shape: many high-replication groups (the regime where
+    the class compression and bucket walks actually do work)."""
+    from repro.core.rd_reference import replica_deletion_reference
+
+    M = 25
+    for _ in range(5):
+        busy = rng.integers(0, 30, M)
+        mu = rng.integers(3, 6, M)
+        groups = tuple(
+            TaskGroup(
+                int(rng.integers(20, 80)),
+                tuple(
+                    sorted(
+                        rng.choice(
+                            M, size=int(rng.integers(8, 13)), replace=False
+                        ).tolist()
+                    )
+                ),
+            )
+            for _ in range(6)
+        )
+        prob = AssignmentProblem(busy=busy, mu=mu, groups=groups)
+        fast = replica_deletion(prob, 0)
+        ref = replica_deletion_reference(prob, 0)
+        assert fast.alloc == ref.alloc
+        assert fast.phi == ref.phi
 
 
 def test_rd_plus_no_worse_than_rd(problems):

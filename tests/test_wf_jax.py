@@ -81,3 +81,76 @@ def test_grouped_scan_matches_sequential_wf(seed):
     )
     assert int(phi) == expected.phi
     assert (np.asarray(alloc).sum(axis=1) == demands).all()
+
+
+def _random_problem_k(rng, k, m=16, busy=None):
+    """Random instance with exactly k groups (drives _pad_k boundaries)."""
+    if busy is None:
+        busy = rng.integers(0, 10, m)
+    mu = rng.integers(1, 6, m)
+    groups = tuple(
+        TaskGroup(
+            int(rng.integers(1, 40)),
+            tuple(
+                sorted(
+                    rng.choice(m, size=int(rng.integers(2, 7)), replace=False)
+                    .tolist()
+                )
+            ),
+        )
+        for _ in range(k)
+    )
+    return AssignmentProblem(busy=busy, mu=mu, groups=groups)
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=30, deadline=None)
+def test_single_and_batched_adapters_match_host_wf(seed):
+    """Device adapters ≡ host WF: allocations *and* Φ, with K swept
+    across the _pad_k power-of-two boundaries (k = 2^j - 1, 2^j, 2^j + 1)."""
+    rng = np.random.default_rng(seed)
+    for k in (1, 2, 3, 4, 5, 7, 8, 9):
+        prob = _random_problem_k(rng, k)
+        host = water_filling(prob)
+        dev = wf_jax.water_filling_jax(prob)
+        dev.validate(prob)
+        assert dev.alloc == host.alloc
+        assert dev.phi == host.phi
+    probs = [_random_problem_k(rng, int(rng.integers(1, 9))) for _ in range(5)]
+    for prob, got in zip(probs, wf_jax.water_filling_jax_batch(probs)):
+        host = water_filling(prob)
+        assert got.alloc == host.alloc
+        assert got.phi == host.phi
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=25, deadline=None)
+def test_chain_matches_sequential_host_admission(seed):
+    """The chained scan must equal sequential host-WF admission with
+    eq. 2 commits between jobs — the engine's same-slot burst contract.
+    Burst sizes sweep the job-padding power-of-two boundaries too."""
+    from repro.core import commit_busy
+
+    rng = np.random.default_rng(seed)
+    m = 16
+    n_jobs = int(rng.integers(1, 6))
+    base_busy = rng.integers(0, 10, m)
+    probs = [
+        _random_problem_k(rng, int(rng.integers(1, 6)), m=m, busy=base_busy)
+        for _ in range(n_jobs)
+    ]
+    chained = wf_jax.water_filling_jax_chain(probs)
+    busy = base_busy.copy()
+    for prob, got in zip(probs, chained):
+        seq_prob = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)
+        host = water_filling(seq_prob)
+        got.validate(prob)
+        assert got.alloc == host.alloc
+        assert got.phi == host.phi
+        busy = commit_busy(busy, host, seq_prob.mu, m)
+
+
+# NOTE: the deterministic (hypothesis-free) halves of these oracles —
+# capacity-guard raises, seed-sweep chain parity, engine-level batched
+# admission equivalence — live in test_engine.py so environments without
+# hypothesis still exercise them.

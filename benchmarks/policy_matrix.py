@@ -17,16 +17,27 @@ Usage::
     PYTHONPATH=src python -m benchmarks.policy_matrix [--smoke] \
         [--scenarios alibaba,bursty] [--orderings fifo,ocwf-acc,setf] \
         [--out policy_matrix_full.csv]
+    PYTHONPATH=src python -m benchmarks.policy_matrix --waterlevel-sweep
 
 ``--smoke`` runs a reduced matrix sized for CI (~2 min on 2 CPU cores).
 Detailed rows land in ``results/policy_matrix.csv`` (or ``--out``); the
 nightly workflow uploads them as a tracked artifact so the JCT/overhead
 table can be trended across PRs.
+
+``--waterlevel-sweep`` instead benchmarks the water-level primitive
+itself — the engine's inner loop — across M ∈ {64, 512, 4096, 16384}
+servers, comparing jnp vs Pallas dispatch latency of
+``water_fill_groups`` and asserting the two backends stay bit-identical.
+Results land in ``results/BENCH_waterlevel.json`` (uploaded nightly next
+to the matrix CSVs).  On CPU the kernel runs in interpret mode, so the
+sweep tracks correctness + jnp-path latency there; the Pallas column is
+only meaningful on real TPU.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -36,6 +47,8 @@ from repro.traces import TRACES, generate
 from .common import RESULTS_DIR, emit, summarize, write_csv
 
 DEFAULT_ORDERINGS = ("fifo", "ocwf-acc", "setf")
+
+WATERLEVEL_MS = (64, 512, 4096, 16384)
 
 FIELDS = [
     "scenario",
@@ -87,6 +100,90 @@ def run_matrix(
     return rows
 
 
+def run_waterlevel_sweep(
+    ms: tuple[int, ...] = WATERLEVEL_MS,
+    *,
+    k_groups: int = 8,
+    iters: int = 10,
+    seed: int = 0,
+    out_json: str = "BENCH_waterlevel.json",
+) -> dict:
+    """M-sweep of the water-level primitive: jnp vs Pallas dispatch.
+
+    Each cell times the jitted ``water_fill_groups`` (K groups over M
+    servers — one WF assignment, the unit of work inside every policy
+    and the chained burst scan) with both backends, asserts bit-equality
+    of (alloc, levels, Φ), and records median latency.  The payload is
+    written to ``results/<out_json>`` so nightly CI can track the perf
+    trajectory alongside the policy-matrix CSVs.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import wf_jax
+
+    rng = np.random.default_rng(seed)
+    rows: list[dict] = []
+    for m in ms:
+        busy = jnp.asarray(rng.integers(0, 64, m), jnp.int32)
+        mu = jnp.asarray(rng.integers(1, 8, m), jnp.int32)
+        gm = rng.random((k_groups, m)) < 0.5
+        gm[:, 0] = True  # no empty availability sets
+        gm_j = jnp.asarray(gm)
+        demands = jnp.asarray(rng.integers(1, 4 * m, k_groups), jnp.int32)
+
+        def timed(use_pallas):
+            def call():
+                return wf_jax._wf_groups_jit(
+                    busy, mu, gm_j, demands, use_pallas=use_pallas
+                )
+
+            out = call()
+            jax.block_until_ready(out)  # compile outside the timed region
+            times = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(call())
+                times.append(time.perf_counter() - t0)
+            return out, float(np.median(times) * 1e6)
+
+        out_jnp, jnp_us = timed(False)
+        out_pallas, pallas_us = timed(True)
+        match = all(
+            bool(jnp.array_equal(a, b)) for a, b in zip(out_jnp, out_pallas)
+        )
+        if not match:
+            raise AssertionError(
+                f"waterlevel sweep: Pallas != jnp at M={m} — parity broken"
+            )
+        rows.append(
+            {
+                "m": m,
+                "k_groups": k_groups,
+                "jnp_us": round(jnp_us, 1),
+                "pallas_us": round(pallas_us, 1),
+                "jnp_over_pallas": round(jnp_us / max(pallas_us, 1e-9), 3),
+                "match": match,
+            }
+        )
+        emit(f"waterlevel/m{m}/jnp", jnp_us, 0.0)
+        emit(f"waterlevel/m{m}/pallas", pallas_us, jnp_us / max(pallas_us, 1e-9))
+    payload = {
+        "backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "iters": iters,
+        "seed": seed,
+        "sweep": rows,
+    }
+    path = os.path.join(RESULTS_DIR, out_json)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# waterlevel sweep written to {path}", flush=True)
+    return payload
+
+
 def print_table(rows: list[dict]) -> None:
     cols = ["scenario", "assign", "ordering", "mean_jct", "p99_jct",
             "mean_overhead_us", "makespan"]
@@ -128,7 +225,18 @@ def main(argv: list[str] | None = None) -> None:
         help="CSV filename under results/ (lets nightly keep the smoke and "
         "paper-scale tables side by side)",
     )
+    parser.add_argument(
+        "--waterlevel-sweep", action="store_true",
+        help="benchmark the water-level primitive (jnp vs Pallas) across "
+        "M and emit results/BENCH_waterlevel.json instead of the matrix",
+    )
     args = parser.parse_args(argv)
+
+    if args.waterlevel_sweep:
+        if not args.no_header:
+            print("name,us_per_call,derived", flush=True)
+        run_waterlevel_sweep(iters=3 if args.smoke else 10)
+        return
 
     if args.smoke:
         trace_kw = dict(n_jobs=25, total_tasks=4_000, n_servers=25, seed=0)

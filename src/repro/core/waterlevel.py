@@ -20,11 +20,24 @@ __all__ = ["water_level", "water_fill_alloc"]
 
 
 def water_level(busy: np.ndarray, mu: np.ndarray, demand: int) -> int:
-    """Minimal integer ``ξ`` with ``Σ_m max{ξ-b_m,0}·μ_m ≥ demand``."""
-    if demand <= 0:
-        return int(busy.min(initial=0))
+    """Minimal integer ``ξ`` with ``Σ_m max{ξ-b_m,0}·μ_m ≥ demand``.
+
+    For ``demand <= 0`` the level stays at the minimum busy value (the
+    device path's convention); empty server sets return 0.  A positive
+    demand against zero total capacity raises :class:`ValueError`,
+    mirroring :func:`repro.core.wf_jax.check_group_capacity` — the device
+    path clamps the divisor instead, so unguarded zero-μ inputs would
+    silently diverge between the two.
+    """
     busy = np.asarray(busy, dtype=np.int64)
     mu = np.asarray(mu, dtype=np.int64)
+    if demand <= 0:
+        return int(busy.min()) if busy.size else 0
+    if busy.size == 0 or int(mu.sum()) <= 0:
+        raise ValueError(
+            f"infeasible water level: demand {int(demand)} with zero total "
+            "capacity (empty server set or all-zero μ)"
+        )
     order = np.argsort(busy, kind="stable")
     b = busy[order]
     w = mu[order]
@@ -33,6 +46,11 @@ def water_level(busy: np.ndarray, mu: np.ndarray, demand: int) -> int:
     n = b.shape[0]
     # capacity at level b[i] using servers 0..i-1: b[i]*cum_w[i-1] - cum_bw[i-1]
     for i in range(n):
+        if cum_w[i] == 0:
+            # a zero-μ prefix has no capacity at any level — no candidate
+            # (and dividing by it would raise); matches the device path's
+            # ``cw > 0`` validity mask
+            continue
         # candidate level with servers 0..i participating:
         #   xi = ceil((demand + cum_bw[i]) / cum_w[i])
         xi = -(-(demand + cum_bw[i]) // cum_w[i])

@@ -12,6 +12,12 @@ exposed as a general on-device balanced-assignment primitive.
 
 All functions are shape-polymorphic in the number of servers ``M`` and use
 int32 throughout (token counts comfortably fit).
+
+At large ``M`` the sort + prefix-sum + segment-search pipeline can run as
+one fused Pallas kernel (:mod:`repro.kernels.waterlevel`): every
+water-level entry point takes ``use_pallas`` (``None`` = auto — the
+kernel on TPU, this jnp pipeline on CPU/interpret), and the two backends
+are bit-identical by construction, which the parity suite asserts.
 """
 
 from __future__ import annotations
@@ -41,8 +47,26 @@ def _ceil_div(a: jax.Array, b: jax.Array) -> jax.Array:
     return -(-a // b)
 
 
+def _resolve_pallas(use_pallas: bool | None, m: int) -> bool:
+    """Static backend choice for an M-server water level.
+
+    ``None`` → auto (Pallas on TPU, jnp elsewhere); see
+    :func:`repro.kernels.waterlevel.resolve_use_pallas`.  Imported lazily
+    (and :mod:`repro.kernels` exports lazily) so the first call pays only
+    the waterlevel-module import, not the whole kernels package.
+    """
+    from repro.kernels.waterlevel import resolve_use_pallas
+
+    return resolve_use_pallas(use_pallas, m)
+
+
 def water_level(
-    busy: jax.Array, mu: jax.Array, mask: jax.Array, demand: jax.Array
+    busy: jax.Array,
+    mu: jax.Array,
+    mask: jax.Array,
+    demand: jax.Array,
+    *,
+    use_pallas: bool | None = None,
 ) -> jax.Array:
     """Minimal integer ξ with ``Σ_m mask_m·max{ξ-busy_m,0}·μ_m ≥ demand``.
 
@@ -51,7 +75,14 @@ def water_level(
       mu: (M,) int32 per-server widths (throughputs); must be >0 where mask.
       mask: (M,) bool availability (the group's ``S_c^k``).
       demand: scalar int32 number of tasks; if 0, returns min available busy.
+      use_pallas: backend override — ``None`` auto-selects (Pallas kernel
+        on TPU, this jnp path otherwise); both produce bit-identical
+        levels.
     """
+    if _resolve_pallas(use_pallas, busy.shape[-1]):
+        from repro.kernels.waterlevel import water_level_pallas
+
+        return water_level_pallas(busy, mu, mask, demand)
     busy = busy.astype(jnp.int32)
     mu = mu.astype(jnp.int32)
     b = jnp.where(mask, busy, _BIG)
@@ -70,15 +101,26 @@ def water_level(
 
 
 def water_fill_alloc(
-    busy: jax.Array, mu: jax.Array, mask: jax.Array, demand: jax.Array
+    busy: jax.Array,
+    mu: jax.Array,
+    mask: jax.Array,
+    demand: jax.Array,
+    *,
+    use_pallas: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Water-level allocation: (alloc (M,) int32, ξ scalar int32).
 
     Mirrors Alg. 2 lines 7-13: participating servers take their full
     ``(ξ-b_m)·μ_m`` capacity in ascending-busy order and the boundary server
-    absorbs the remainder, expressed as a prefix-sum clamp.
+    absorbs the remainder, expressed as a prefix-sum clamp.  With
+    ``use_pallas`` (auto on TPU) the sort + prefix sums + segment search
+    run as one fused kernel; allocations are bit-identical either way.
     """
-    xi = water_level(busy, mu, mask, demand)
+    if _resolve_pallas(use_pallas, busy.shape[-1]):
+        from repro.kernels.waterlevel import water_fill_alloc_pallas
+
+        return water_fill_alloc_pallas(busy, mu, mask, demand)
+    xi = water_level(busy, mu, mask, demand, use_pallas=False)
     b = jnp.where(mask, busy.astype(jnp.int32), _BIG)
     w = jnp.where(mask, mu.astype(jnp.int32), 0)
     order = jnp.argsort(b)
@@ -94,6 +136,8 @@ def water_fill_groups(
     mu: jax.Array,
     group_mask: jax.Array,
     demands: jax.Array,
+    *,
+    use_pallas: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sequential WF over K task groups (lax.scan), carrying busy levels.
 
@@ -102,16 +146,20 @@ def water_fill_groups(
       mu: (M,) int32 per-server throughputs.
       group_mask: (K, M) bool — availability matrix (``m ∈ S_c^k``).
       demands: (K,) int32 — ``|T_c^k|`` (0 demand → no-op group).
+      use_pallas: water-level backend override (resolved once, outside
+        the scan); ``None`` auto-selects per
+        :func:`repro.kernels.waterlevel.resolve_use_pallas`.
 
     Returns:
       alloc: (K, M) int32 tasks per (group, server).
       levels: (K,) int32 water levels ``ξ_k``.
       phi: scalar int32 — ``max_k ξ_k`` over non-empty groups (WF's Φ_c).
     """
+    up = _resolve_pallas(use_pallas, busy.shape[-1])
 
     def step(b, inputs):
         m_k, d_k = inputs
-        alloc_k, xi = water_fill_alloc(b, mu, m_k, d_k)
+        alloc_k, xi = water_fill_alloc(b, mu, m_k, d_k, use_pallas=up)
         b_next = jnp.where(m_k & (d_k > 0), jnp.maximum(b, xi), b)  # eq. 10
         return b_next, (alloc_k, xi)
 
@@ -122,11 +170,17 @@ def water_fill_groups(
     return alloc, levels, phi
 
 
+def _water_fill_groups_jnp(busy, mu, group_mask, demands):
+    return water_fill_groups(busy, mu, group_mask, demands, use_pallas=False)
+
+
 # batched over B *independent* arrival instances (per-problem busy
 # snapshots). NOTE: results are only mutually consistent if the problems
 # target disjoint queues — same-slot admission must use the chained scan
-# below, which commits eq. 2 between jobs.
-water_fill_batch = jax.vmap(water_fill_groups, in_axes=(0, 0, 0, 0))
+# below, which commits eq. 2 between jobs.  Pinned to the jnp water level:
+# a vmapped pallas_call is untested, and an auto-resolved backend inside
+# the jit would be baked into the cache (see ROADMAP for the TPU follow-up).
+water_fill_batch = jax.vmap(_water_fill_groups_jnp, in_axes=(0, 0, 0, 0))
 
 
 def water_fill_chain(
@@ -134,6 +188,8 @@ def water_fill_chain(
     mu: jax.Array,
     group_mask: jax.Array,
     demands: jax.Array,
+    *,
+    use_pallas: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sequential admission of B jobs in one scan, carrying busy levels.
 
@@ -154,10 +210,11 @@ def water_fill_chain(
       phi: (B,) int32 per-job ``Φ_c`` (max water level over its groups).
       busy_out: (M,) int32 busy levels after the whole burst.
     """
+    up = _resolve_pallas(use_pallas, busy.shape[-1])
 
     def job_step(b, inputs):
         mu_j, mask_j, d_j = inputs
-        alloc_j, _, phi_j = water_fill_groups(b, mu_j, mask_j, d_j)
+        alloc_j, _, phi_j = water_fill_groups(b, mu_j, mask_j, d_j, use_pallas=up)
         loads = alloc_j.sum(axis=0)
         b_next = b + jnp.where(loads > 0, _ceil_div(loads, mu_j), 0)  # eq. 2
         return b_next, (alloc_j, phi_j)
@@ -170,9 +227,9 @@ def water_fill_chain(
     return alloc, phi, busy_out
 
 
-_wf_groups_jit = jax.jit(water_fill_groups)
+_wf_groups_jit = jax.jit(water_fill_groups, static_argnames="use_pallas")
 _wf_batch_jit = jax.jit(water_fill_batch)
-_wf_chain_jit = jax.jit(water_fill_chain)
+_wf_chain_jit = jax.jit(water_fill_chain, static_argnames="use_pallas")
 
 
 def _pad_k(k: int) -> int:
@@ -245,12 +302,16 @@ def _to_assignment(
     return result
 
 
-def water_filling_jax(problem: AssignmentProblem) -> Assignment:
+def water_filling_jax(
+    problem: AssignmentProblem, *, use_pallas: bool | None = None
+) -> Assignment:
     """Host-facing WF that runs the water level on device.
 
     Same allocation and ``Φ_c`` as :func:`repro.core.wf.water_filling`
     (both implement Alg. 2 exactly); registered as ``"wf_jax"`` so the
     scheduling engine can exercise the TPU-native path end-to-end.
+    ``use_pallas`` picks the water-level backend (``None`` = auto); the
+    realized schedule is bit-identical either way.
     """
     if not problem.groups:
         return Assignment(alloc=[], phi=0)  # parity with host water_filling
@@ -258,6 +319,9 @@ def water_filling_jax(problem: AssignmentProblem) -> Assignment:
     alloc, _, phi = _wf_groups_jit(
         jnp.asarray(busy[0]), jnp.asarray(mu[0]),
         jnp.asarray(masks[0]), jnp.asarray(demands[0]),
+        # resolve before the jit boundary so the cache keys on the
+        # concrete backend (env overrides stay effective per call)
+        use_pallas=_resolve_pallas(use_pallas, problem.n_servers),
     )
     return _to_assignment(problem, np.asarray(alloc), int(phi))
 
@@ -270,6 +334,9 @@ def water_filling_jax_batch(problems: list[AssignmentProblem]) -> list[Assignmen
     are only mutually consistent if the problems target disjoint queues.
     For same-slot arrival bursts — where each job must see the busy times
     left by its predecessors — use :func:`water_filling_jax_chain`.
+
+    Always runs the jnp water level (no Pallas dispatch under vmap yet —
+    see the ROADMAP open item).
     """
     if not problems:
         return []
@@ -289,7 +356,7 @@ def water_filling_jax_batch(problems: list[AssignmentProblem]) -> list[Assignmen
 
 
 def water_filling_jax_chain(
-    problems: list[AssignmentProblem],
+    problems: list[AssignmentProblem], *, use_pallas: bool | None = None
 ) -> list[Assignment]:
     """Admit many same-slot arrivals in one chained device dispatch.
 
@@ -298,6 +365,8 @@ def water_filling_jax_chain(
     the returned assignments (and their ``Φ_c``) are bit-identical to
     calling :func:`water_filling_jax` per job with busy times re-read from
     the cluster after each enqueue — the engine's sequential admit path.
+    ``use_pallas`` picks the water-level backend inside the scan (``None``
+    = auto: the fused Pallas kernel on TPU, the jnp pipeline elsewhere).
     """
     if not problems:
         return []
@@ -327,7 +396,7 @@ def water_filling_jax_chain(
         demands = np.concatenate([demands, np.zeros((pad, k_pad), np.int32)])
     alloc, phi, _ = _wf_chain_jit(
         jnp.asarray(busy[0]), jnp.asarray(mu), jnp.asarray(masks),
-        jnp.asarray(demands),
+        jnp.asarray(demands), use_pallas=_resolve_pallas(use_pallas, m),
     )
     alloc = np.asarray(alloc)
     phi = np.asarray(phi)

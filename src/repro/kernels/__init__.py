@@ -8,17 +8,44 @@ Each kernel ships three files:
 
 On this CPU container kernels execute with ``interpret=True``; on real
 TPU the same ``pallas_call`` lowers to Mosaic.  The paper's contribution
-is scheduling (no kernel-level claim — see DESIGN.md); these kernels
-cover the serving/training hot spots of the *framework*: flash attention
+is scheduling, and :mod:`.waterlevel` is its hot spot made hardware-fast:
+the fused water-level kernel (sort + prefix-sum + masked ceiling-division
+segment search) behind every WF-family policy, auto-dispatched by
+:func:`repro.core.wf_jax.water_level` & co.  The remaining kernels cover
+the serving/training hot spots of the *framework*: flash attention
 (train/prefill), decode attention (one token vs long KV), the Mamba2 SSD
 chunk scan, and fused RMSNorm.
 """
 
-from .ops import decode_attention, flash_attention, rmsnorm_fused, ssd_scan
+# PEP 562 lazy exports: importing repro.kernels (or one symbol of it)
+# must not drag in every kernel — the scheduler's water-level dispatch
+# imports this package on the first water_level call, and the pure-jnp
+# path shouldn't pay for the attention/SSD/RMSNorm kernels it never uses.
+_EXPORTS = {
+    "decode_attention": ".ops",
+    "flash_attention": ".ops",
+    "rmsnorm_fused": ".ops",
+    "ssd_scan": ".ops",
+    "resolve_use_pallas": ".waterlevel",
+    "water_fill_alloc_pallas": ".waterlevel",
+    "water_level_pallas": ".waterlevel",
+}
 
-__all__ = [
-    "decode_attention",
-    "flash_attention",
-    "rmsnorm_fused",
-    "ssd_scan",
-]
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    submodule = _EXPORTS.get(name)
+    if submodule is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    from importlib import import_module
+
+    mod = import_module(submodule, __name__)
+    # bind every export of this submodule now: importing .ops sets the
+    # same-named kernel *submodules* (flash_attention, …) as package
+    # attributes, which would otherwise shadow __getattr__ and leak
+    # modules where callers expect the functions
+    for export, target in _EXPORTS.items():
+        if target == submodule:
+            globals()[export] = getattr(mod, export)
+    return globals()[name]

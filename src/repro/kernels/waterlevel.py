@@ -1,0 +1,305 @@
+"""Pallas water-level kernel: fused sort + prefix-sum + segment search.
+
+The integer water level (paper eqs. 7/9) is the inner loop of every
+policy in the scheduling engine — WF, the OCWF/OCWF-ACC reordering scan,
+and the chained same-slot burst admission (``water_fill_chain``) all
+reduce to *sort busy levels, prefix-sum capacities, masked ceiling
+division*.  The jnp path in :mod:`repro.core.wf_jax` materializes each
+stage as a separate XLA op (sort, two cumsums, the division, the argmax,
+the scatter); at large ``M`` that is several HBM round-trips per group.
+This kernel fuses the whole pipeline into one VMEM-resident program:
+
+- **sort**: a bitonic compare-exchange network over ``M`` padded to a
+  power of two (lane-width 128 minimum), keyed lexicographically by
+  ``(busy, original index)`` — exactly the order of jnp's stable
+  ``argsort``, so tie-breaks (and therefore allocations) are
+  bit-identical to the jnp path;
+- **prefix sums**: Hillis–Steele log-step scans of ``μ`` and ``b·μ``;
+- **segment search**: the masked ceiling division
+  ``ξ_i = ⌈(T + Σb·μ)/Σμ⌉`` with the first-valid-segment selection and
+  the ``ξ ≥ b+1`` clamp, all in-register;
+- **allocation**: the prefix-sum clamp of Alg. 2 lines 7-13 (``take =
+  clip(T − prev, 0, caps)``), emitted in sorted order together with the
+  permutation so the caller scatters once.
+
+Everything is int32 with the same arithmetic (including the same
+overflow behavior) as the jnp path, so results are bit-identical — the
+parity suite (``tests/test_waterlevel_parity.py``) asserts exact
+equality of allocations and Φ across host, jnp, and Pallas.
+
+Dispatch policy (:func:`resolve_use_pallas`): Pallas engages on TPU by
+default and auto-falls back to the jnp path on CPU, where ``pallas_call``
+would only run in (slow) interpret mode.  Tests and the benchmark sweep
+force the kernel on CPU with ``use_pallas=True``, which runs it under
+``interpret=True``.  ``REPRO_WATERLEVEL_BACKEND={pallas,jnp,auto}``
+overrides the default.  The single-block design keeps the padded arrays
+(busy, μ, index, plus scan temporaries) in VMEM, which bounds the
+supported width at ``PALLAS_MAX_M``; beyond that the dispatcher falls
+back to jnp regardless of the override.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "PALLAS_MAX_M",
+    "resolve_use_pallas",
+    "water_level_pallas",
+    "water_fill_alloc_pallas",
+]
+
+# must match repro.core.wf_jax._BIG: masked servers sort to this sentinel
+_BIG = 2**30
+
+_LANES = 128  # TPU lane width: minimum padded M
+
+# VMEM bound for the single-block kernel: a handful of (1, M) int32
+# arrays plus scan temporaries stay well under 16 MB up to 2^15 lanes.
+PALLAS_MAX_M = 1 << 15
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def resolve_use_pallas(explicit: bool | None, m: int) -> bool:
+    """Decide the water-level backend for a width-``m`` problem.
+
+    ``explicit`` wins when given; otherwise ``REPRO_WATERLEVEL_BACKEND``
+    (``pallas``/``jnp``/``auto``), with ``auto`` choosing Pallas only on
+    TPU.  Widths beyond :data:`PALLAS_MAX_M` always fall back to jnp
+    (the single-block kernel would not fit VMEM).
+    """
+    if m > PALLAS_MAX_M:
+        return False
+    if explicit is not None:
+        return bool(explicit)
+    env = os.environ.get("REPRO_WATERLEVEL_BACKEND", "auto")
+    if env not in ("pallas", "jnp", "auto"):
+        raise ValueError(
+            f"REPRO_WATERLEVEL_BACKEND={env!r}: expected 'pallas', 'jnp', "
+            "or 'auto'"
+        )
+    if env == "jnp":
+        return False
+    if env == "pallas":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _scan_sum(x: jax.Array, lane: jax.Array, n: int) -> jax.Array:
+    """Inclusive prefix sum along lanes (Hillis–Steele, log2(n) steps).
+
+    ``jnp.roll`` wraps, but wrapped lanes (lane < d) are masked to 0, so
+    the scan is exact for any values.
+    """
+    d = 1
+    while d < n:
+        x = x + jnp.where(lane >= d, jnp.roll(x, d, axis=1), 0)
+        d *= 2
+    return x
+
+
+@functools.lru_cache(maxsize=None)
+def _bitonic_stages(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """(K, J) parameters of the n-lane bitonic network's compare-exchange
+    stages: merge size k ∈ {2,4,…,n}, butterfly stride j ∈ {k/2,…,1}."""
+    ks, js = [], []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            ks.append(k)
+            js.append(j)
+            j //= 2
+        k *= 2
+    return np.asarray(ks, np.int32), np.asarray(js, np.int32)
+
+
+def _waterlevel_kernel(
+    demand_ref, ktab_ref, jtab_ref, b_ref, w_ref, level_ref, take_ref, idx_ref,
+    *, n_lanes: int, n_stages: int,
+):
+    """Fused water level + allocation over one (1, n_lanes) block.
+
+    Inputs are pre-masked: ``b = busy`` where available else ``_BIG``,
+    ``w = μ`` where available else 0; padded lanes carry the same
+    sentinels so they sort past every real lane and contribute zero
+    capacity.
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, n_lanes), 1)
+    b = b_ref[...]
+    w = w_ref[...]
+    idx = lane
+
+    # --- bitonic sort, ascending by (busy, original index) ---------------
+    # Lexicographic keys are unique, so the network realizes exactly the
+    # stable sort order of the jnp path's argsort.  Partner exchange is
+    # two rolls + a select (the classic vectorized butterfly): for lanes
+    # with bit j clear the partner sits j lanes right, else j lanes left.
+    # The O(log²M) stages run as a fori_loop over the (k, j) tables in
+    # SMEM — unrolling them makes XLA's CPU compile of the interpreted
+    # kernel take ~100× longer for identical results.
+    def stage(s, carry):
+        b, w, idx = carry
+        k, j = ktab_ref[s], jtab_ref[s]
+        lower = (lane & j) == 0
+        b_p = jnp.where(lower, jnp.roll(b, -j, axis=1), jnp.roll(b, j, axis=1))
+        w_p = jnp.where(lower, jnp.roll(w, -j, axis=1), jnp.roll(w, j, axis=1))
+        i_p = jnp.where(lower, jnp.roll(idx, -j, axis=1), jnp.roll(idx, j, axis=1))
+        asc = (lane & k) == 0
+        gt = (b > b_p) | ((b == b_p) & (idx > i_p))
+        # a lane keeps the pair's min iff it is the lower lane of an
+        # ascending block or the upper lane of a descending one
+        take_partner = (lower == asc) == gt
+        return (
+            jnp.where(take_partner, b_p, b),
+            jnp.where(take_partner, w_p, w),
+            jnp.where(take_partner, i_p, idx),
+        )
+
+    b, w, idx = jax.lax.fori_loop(0, n_stages, stage, (b, w, idx))
+
+    # --- prefix sums + masked ceiling-division segment search ------------
+    demand = demand_ref[0, 0]
+    cw = _scan_sum(w, lane, n_lanes)
+    cbw = _scan_sum(b * w, lane, n_lanes)
+    xi = -(-(demand + cbw) // jnp.maximum(cw, 1))
+    next_b = jnp.where(lane == n_lanes - 1, _BIG, jnp.roll(b, -1, axis=1))
+    valid = (xi <= next_b) & (cw > 0)
+    # first valid segment, with the jnp path's argmax convention (0 when
+    # nothing is valid — the guarded-degenerate case)
+    first = jnp.min(jnp.where(valid, lane, n_lanes))
+    first = jnp.where(first == n_lanes, 0, first)
+    sel = lane == first
+    xi0 = jnp.sum(jnp.where(sel, xi, 0))  # exactly one selected lane
+    b0 = jnp.sum(jnp.where(sel, b, 0))
+    level = jnp.maximum(xi0, b0 + 1)
+    level_ref[0, 0] = level
+
+    # --- allocation at the level (Alg. 2 lines 7-13, prefix-sum clamp) ---
+    caps = jnp.maximum(level - b, 0) * w
+    prev = _scan_sum(caps, lane, n_lanes) - caps  # exclusive prefix
+    take_ref[...] = jnp.clip(demand - prev, 0, caps)
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _waterlevel_call_padded(
+    b2: jax.Array, w2: jax.Array, d2: jax.Array, *, interpret: bool
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Invoke the kernel on already-padded ``(1, n_lanes)`` inputs.
+
+    Kept separate from the padding so the jit cache keys on the padded
+    lane count, not the caller's ``M`` — every ``M ≤ 128`` shares one
+    compile instead of recompiling the kernel per distinct width.
+    """
+    n_lanes = b2.shape[-1]
+    ks, js = _bitonic_stages(n_lanes)
+    level, take, idx = pl.pallas_call(
+        functools.partial(
+            _waterlevel_kernel, n_lanes=n_lanes, n_stages=len(ks)
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_lanes), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_lanes), jnp.int32),
+        ],
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        interpret=interpret,
+    )(d2, jnp.asarray(ks), jnp.asarray(js), b2, w2)
+    return level[0, 0], take[0], idx[0]
+
+
+def _waterlevel_call(
+    b: jax.Array, w: jax.Array, demand: jax.Array, *, interpret: bool
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pad to a power of two (≥ the 128-lane width) and invoke the kernel.
+
+    Returns ``(level, take_sorted, idx_sorted)``; the caller scatters the
+    sorted takes back through the permutation (padded lanes carry
+    out-of-range indices and zero takes, so a ``mode="drop"`` scatter
+    ignores them).
+    """
+    m = b.shape[0]
+    n_lanes = max(_LANES, _next_pow2(m))
+    pad = n_lanes - m
+    b2 = jnp.pad(b, (0, pad), constant_values=_BIG).reshape(1, n_lanes)
+    w2 = jnp.pad(w, (0, pad)).reshape(1, n_lanes)
+    d2 = jnp.asarray(demand, jnp.int32).reshape(1, 1)
+    return _waterlevel_call_padded(b2, w2, d2, interpret=interpret)
+
+
+def _masked_inputs(
+    busy: jax.Array, mu: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    b = jnp.where(mask, busy.astype(jnp.int32), _BIG)
+    w = jnp.where(mask, mu.astype(jnp.int32), 0)
+    return b, w
+
+
+def _interp(interpret: bool | None) -> bool:
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def water_level_pallas(
+    busy: jax.Array,
+    mu: jax.Array,
+    mask: jax.Array,
+    demand: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Kernel-backed twin of :func:`repro.core.wf_jax.water_level`.
+
+    Bit-identical to the jnp path, including the ``demand <= 0`` →
+    minimum-available-busy convention (handled here, outside the kernel).
+    """
+    b, w = _masked_inputs(busy, mu, mask)
+    demand = jnp.asarray(demand, jnp.int32)
+    level, _, _ = _waterlevel_call(b, w, demand, interpret=_interp(interpret))
+    return jnp.where(demand > 0, level, b.min())
+
+
+def water_fill_alloc_pallas(
+    busy: jax.Array,
+    mu: jax.Array,
+    mask: jax.Array,
+    demand: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Kernel-backed twin of :func:`repro.core.wf_jax.water_fill_alloc`.
+
+    One ``pallas_call`` computes the level and the sorted takes; the only
+    op outside the kernel is the scatter through the sort permutation
+    (and the ``demand <= 0`` level convention, which cannot affect the
+    all-zero allocation).
+    """
+    b, w = _masked_inputs(busy, mu, mask)
+    demand = jnp.asarray(demand, jnp.int32)
+    level, take, idx = _waterlevel_call(b, w, demand, interpret=_interp(interpret))
+    alloc = jnp.zeros(b.shape[0], jnp.int32).at[idx].set(take, mode="drop")
+    return alloc, jnp.where(demand > 0, level, b.min())

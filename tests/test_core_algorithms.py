@@ -154,3 +154,66 @@ def test_reorder_prefers_short_jobs(rng):
     big = OutstandingJob(1, (TaskGroup(400, tuple(range(5))),), mu)
     schedule, _ = reorder_schedule([big, small], M)
     assert schedule[0][0] == 0  # shortest-estimated-time-first
+
+
+# ---- host water-level regressions (device-parity bugfixes) ------------------
+# Deterministic twins of the hypothesis suite in test_waterlevel_parity.py,
+# kept here so environments without hypothesis still cover the fixes.
+
+
+def test_water_level_zero_demand_returns_min_busy():
+    """demand <= 0 must return the true minimum busy level; the old
+    ``busy.min(initial=0)`` returned 0 whenever all levels were positive,
+    diverging from the device path's masked min."""
+    from repro.core.waterlevel import water_level
+
+    assert water_level(np.array([7, 9, 12]), np.array([2, 2, 2]), 0) == 7
+    assert water_level(np.array([7, 9, 12]), np.array([2, 2, 2]), -3) == 7
+    assert water_level(np.array([], dtype=np.int64), np.array([], dtype=np.int64), 0) == 0
+
+
+def test_water_level_skips_zero_mu_prefix():
+    """A zero-μ server holding the smallest busy level used to raise
+    ZeroDivisionError on the host while the device path clamped the
+    divisor; the zero-capacity prefix must simply be skipped."""
+    from repro.core.waterlevel import water_fill_alloc, water_level
+
+    busy = np.array([0, 4, 6])
+    mu = np.array([0, 2, 2])
+    level = water_level(busy, mu, 5)
+    # servers 1+2 provide the capacity: level 7 gives (7-4)*2 + (7-6)*2 = 8 >= 5
+    assert level == 7
+    alloc, xi = water_fill_alloc(busy, mu, 5)
+    assert xi == 7
+    assert alloc[0] == 0 and alloc.sum() == 5
+
+
+def test_water_level_rejects_zero_total_capacity():
+    from repro.core.waterlevel import water_level
+
+    with pytest.raises(ValueError, match="zero total capacity"):
+        water_level(np.array([1, 2]), np.array([0, 0]), 3)
+    with pytest.raises(ValueError, match="zero total capacity"):
+        water_level(np.array([], dtype=np.int64), np.array([], dtype=np.int64), 3)
+
+
+def test_water_level_matches_device_on_int32_boundary():
+    """Busy just under the device's 2**30 sentinel: int64 host and int32
+    device arithmetic must agree exactly."""
+    import jax.numpy as jnp
+
+    from repro.core import wf_jax
+    from repro.core.waterlevel import water_level
+
+    busy = np.array([2**30 - 17, 3], dtype=np.int64)
+    mu = np.ones(2, dtype=np.int64)
+    mask = np.ones(2, dtype=bool)
+    for demand in (0, 1, 11):
+        host = water_level(busy, mu, demand)
+        dev = int(
+            wf_jax.water_level(
+                jnp.array(busy), jnp.array(mu), jnp.array(mask),
+                jnp.int32(demand), use_pallas=False,
+            )
+        )
+        assert host == dev

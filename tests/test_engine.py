@@ -391,3 +391,72 @@ def test_wf_jax_host_path_guards_degenerate_groups():
     )
     with pytest.raises(ValueError, match="zero total capacity"):
         water_filling_jax(fake)
+
+
+# ---- same-slot burst folding for reordering policies ------------------------
+
+
+class _CountingPolicy:
+    """SchedulingPolicy wrapper that counts full reordering rescans."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = inner.name
+        self.schedule_calls = 0
+
+    @property
+    def reorders(self):
+        return self.inner.reorders
+
+    def assign(self, problem):
+        return self.inner.assign(problem)
+
+    def assign_batch(self, problems):
+        return self.inner.assign_batch(problems)
+
+    def schedule(self, *args, **kwargs):
+        self.schedule_calls += 1
+        return self.inner.schedule(*args, **kwargs)
+
+
+@pytest.mark.parametrize("ordering", ["ocwf", "ocwf-acc", "setf"])
+def test_reorder_burst_folds_to_single_rescan(ordering):
+    """A same-slot burst under a reordering policy must be admitted with
+    ONE rescan (totals are conserved within the slot, so the final
+    reschedule subsumes the intermediate ones) and the realized schedule
+    must equal per-arrival sequential admission exactly."""
+    jobs = generate("bursty", n_jobs=24, total_tasks=3_000, n_servers=20, seed=7)
+    slots = {}
+    for j in jobs:
+        if j.n_tasks > 0:
+            slots.setdefault(j.arrival, []).append(j)
+    assert any(len(b) > 1 for b in slots.values()), "trace must contain bursts"
+
+    batched_policy = _CountingPolicy(make_policy("wf", ordering))
+    batched = SchedulingEngine(20, batched_policy, debug=True).run(jobs)
+    seq_policy = _CountingPolicy(make_policy("wf", ordering))
+    seq = SchedulingEngine(
+        20, seq_policy, batch_arrivals=False, debug=True
+    ).run(jobs)
+
+    assert batched.jct == seq.jct
+    assert batched.makespan == seq.makespan
+    # one rescan per arrival slot vs one per arrival
+    assert batched_policy.schedule_calls == len(slots)
+    assert seq_policy.schedule_calls == sum(len(b) for b in slots.values())
+
+
+# ---- Pallas water-level backend through the engine --------------------------
+
+
+def test_engine_wf_jax_pallas_backend_schedule_identical(monkeypatch):
+    """Forcing the Pallas water-level kernel (interpret mode on CPU) must
+    leave the engine's realized schedule bit-identical to host WF — the
+    wiring contract for repro.kernels.waterlevel."""
+    monkeypatch.setenv("REPRO_WATERLEVEL_BACKEND", "pallas")
+    jobs = generate("bursty", n_jobs=10, total_tasks=800, n_servers=10, seed=5)
+    dev = SchedulingEngine(10, make_policy("wf_jax"), debug=True).run(jobs)
+    monkeypatch.delenv("REPRO_WATERLEVEL_BACKEND")
+    host = SchedulingEngine(10, make_policy("wf")).run(jobs)
+    assert dev.jct == host.jct
+    assert dev.makespan == host.makespan

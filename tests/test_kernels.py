@@ -131,3 +131,51 @@ def test_flash_attention_matches_model_attention():
     )
     out = out.reshape(b, hkv, g, s, hd).transpose(0, 3, 1, 2, 4)
     np.testing.assert_allclose(out, model_out, atol=5e-5)
+
+
+# ---- water-level kernel -----------------------------------------------------
+
+
+def test_waterlevel_kernel_bit_identical_to_jnp():
+    """The fused sort+prefix-sum+segment-search kernel must reproduce the
+    jnp water level and allocation bit-for-bit across mask/μ/demand
+    corners and the 128-lane padding boundaries (deterministic twin of
+    the hypothesis suite in test_waterlevel_parity.py)."""
+    from repro.core import wf_jax
+    from repro.kernels import water_fill_alloc_pallas, water_level_pallas
+
+    rng = np.random.default_rng(0)
+    for m in (1, 2, 5, 127, 128, 129, 200):
+        for demand_hi in (1, 40, 400):
+            busy = rng.integers(0, 30, m)
+            mu = rng.integers(0, 6, m)  # zero-μ servers included
+            mask = rng.random(m) < 0.7
+            if not (mask & (mu > 0)).any():
+                mask[0] = True
+                mu[0] = 1
+            demand = int(rng.integers(0, demand_hi))
+            args = (
+                jnp.array(busy), jnp.array(mu), jnp.array(mask),
+                jnp.int32(demand),
+            )
+            assert int(wf_jax.water_level(*args, use_pallas=False)) == int(
+                water_level_pallas(*args)
+            )
+            a_j, x_j = wf_jax.water_fill_alloc(*args, use_pallas=False)
+            a_p, x_p = water_fill_alloc_pallas(*args)
+            assert int(x_j) == int(x_p)
+            assert (np.asarray(a_j) == np.asarray(a_p)).all()
+
+
+def test_waterlevel_kernel_resolution_rules():
+    """Auto-dispatch: jnp on CPU, Pallas on TPU, capped at PALLAS_MAX_M;
+    explicit choices win below the cap."""
+    from repro.kernels.waterlevel import PALLAS_MAX_M, resolve_use_pallas
+
+    on_tpu = jax.default_backend() == "tpu"
+    assert resolve_use_pallas(None, 64) == on_tpu
+    assert resolve_use_pallas(True, 64) is True
+    assert resolve_use_pallas(False, 64) is False
+    # beyond the single-block VMEM bound everything falls back to jnp
+    assert resolve_use_pallas(True, PALLAS_MAX_M + 1) is False
+    assert resolve_use_pallas(None, PALLAS_MAX_M + 1) is False

@@ -1,0 +1,174 @@
+"""Host ↔ device(jnp) ↔ Pallas water-level parity suite.
+
+Three implementations of eqs. 7/9 must agree *exactly*:
+
+- host closed form (``repro.core.waterlevel``, int64 numpy),
+- device jnp pipeline (``repro.core.wf_jax``, int32, masked),
+- the fused Pallas kernel (``repro.kernels.waterlevel``, interpret mode
+  on CPU) — bit-identical to the jnp path by construction.
+
+Property-based coverage targets the divergences fixed in this series:
+zero-μ servers (host used to divide by a zero capacity prefix), demand 0
+(host used to return 0 whenever all busy levels were positive), plus
+single-server, all-masked-but-one, and int32-boundary busy levels.
+Deterministic regression twins that don't need hypothesis live in
+``test_core_algorithms.py`` (host fixes) and ``test_kernels.py``
+(Pallas ≡ jnp)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import AssignmentProblem, TaskGroup, commit_busy, water_filling
+from repro.core import waterlevel as wl_np
+from repro.core import wf_jax
+from repro.kernels.waterlevel import water_fill_alloc_pallas, water_level_pallas
+
+_BIG = 2**30
+
+
+def _instance(rng, m, mask_case, demand_case):
+    """Random (busy, mu, mask, demand) hitting the drifted corners.
+
+    μ may be 0 per server (but ≥1 total available capacity, the contract
+    both paths share); ``mask_case`` 1 leaves exactly one server
+    available; ``demand_case`` 0/1 pins demand to the boundary.
+    """
+    busy = rng.integers(0, 25, m)
+    mu = rng.integers(0, 6, m)  # zero-μ servers included
+    if mask_case == 1:  # all masked but one
+        mask = np.zeros(m, dtype=bool)
+        mask[int(rng.integers(m))] = True
+    else:
+        mask = rng.random(m) < 0.6
+    i = int(rng.integers(m)) if not (mask & (mu > 0)).any() else None
+    if i is not None:
+        mask[i] = True
+        mu[i] = max(1, int(mu[i]))
+    demand = {0: 0, 1: 1}.get(demand_case, int(rng.integers(0, 120)))
+    return busy, mu, mask, demand
+
+
+def _assert_three_way(busy, mu, mask, demand):
+    """Level and allocation must match bit-for-bit across all paths."""
+    args = (jnp.array(busy), jnp.array(mu), jnp.array(mask), jnp.int32(demand))
+    host_level = wl_np.water_level(busy[mask], mu[mask], demand)
+    jnp_level = int(wf_jax.water_level(*args, use_pallas=False))
+    pallas_level = int(water_level_pallas(*args))
+    assert host_level == jnp_level == pallas_level
+
+    host_alloc, host_xi = wl_np.water_fill_alloc(busy[mask], mu[mask], demand)
+    jnp_alloc, jnp_xi = wf_jax.water_fill_alloc(*args, use_pallas=False)
+    pal_alloc, pal_xi = water_fill_alloc_pallas(*args)
+    assert int(host_xi) == int(jnp_xi) == int(pal_xi)
+    full = np.zeros(len(busy), dtype=np.int64)
+    full[np.flatnonzero(mask)] = host_alloc
+    assert (np.asarray(jnp_alloc) == full).all()
+    assert (np.asarray(jnp_alloc) == np.asarray(pal_alloc)).all()
+
+
+@given(
+    seed=st.integers(0, 100_000),
+    m=st.sampled_from([1, 2, 3, 7, 16, 24]),
+    mask_case=st.integers(0, 1),
+    demand_case=st.integers(0, 2),
+)
+@settings(max_examples=60, deadline=None)
+def test_level_and_alloc_parity(seed, m, mask_case, demand_case):
+    rng = np.random.default_rng(seed)
+    busy, mu, mask, demand = _instance(rng, m, mask_case, demand_case)
+    _assert_three_way(busy, mu, mask, demand)
+
+
+@given(seed=st.integers(0, 100_000), m=st.sampled_from([1, 2, 3]))
+@settings(max_examples=30, deadline=None)
+def test_int32_boundary_busy_parity(seed, m):
+    """Busy levels just under the _BIG sentinel: the int32 device/kernel
+    arithmetic must still agree with the int64 host closed form (μ kept
+    at 1 and demand small so Σ b·μ stays inside int32)."""
+    rng = np.random.default_rng(seed)
+    busy = rng.integers(0, 25, m)
+    busy[0] = _BIG - int(rng.integers(1, 1000))
+    mu = np.ones(m, dtype=np.int64)
+    mask = np.ones(m, dtype=bool)
+    demand = int(rng.integers(0, 50))
+    _assert_three_way(busy, mu, mask, demand)
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=20, deadline=None)
+def test_zero_capacity_raises_on_host(seed):
+    """All-zero-μ inputs must raise (host) instead of ZeroDivisionError;
+    the device paths are guarded upstream by check_group_capacity."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 8))
+    busy = rng.integers(0, 25, m)
+    with pytest.raises(ValueError, match="zero total capacity"):
+        wl_np.water_level(busy, np.zeros(m, dtype=np.int64), 5)
+
+
+def _problem(rng, m=16, k_hi=4, busy=None):
+    if busy is None:
+        busy = rng.integers(0, 10, m)
+    mu = rng.integers(1, 6, m)
+    groups = tuple(
+        TaskGroup(
+            int(rng.integers(1, 40)),
+            tuple(
+                sorted(
+                    rng.choice(m, size=int(rng.integers(2, 7)), replace=False)
+                    .tolist()
+                )
+            ),
+        )
+        for _ in range(int(rng.integers(1, k_hi + 1)))
+    )
+    return AssignmentProblem(busy=busy, mu=mu, groups=groups)
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=20, deadline=None)
+def test_groups_scan_pallas_matches_jnp_bitwise(seed):
+    """water_fill_groups with the kernel inside the scan ≡ jnp path:
+    allocations, levels, and Φ all bit-identical."""
+    rng = np.random.default_rng(seed)
+    m = 16
+    busy = rng.integers(0, 10, m)
+    mu = rng.integers(1, 6, m)
+    k = int(rng.integers(1, 5))
+    gm = rng.random((k, m)) < 0.5
+    for i in range(k):
+        if not gm[i].any():
+            gm[i, 0] = True
+    demands = rng.integers(0, 50, k)  # demand-0 groups are no-ops
+    args = (jnp.array(busy), jnp.array(mu), jnp.array(gm), jnp.array(demands))
+    a_j, l_j, p_j = wf_jax._wf_groups_jit(*args, use_pallas=False)
+    a_p, l_p, p_p = wf_jax._wf_groups_jit(*args, use_pallas=True)
+    assert (np.asarray(a_j) == np.asarray(a_p)).all()
+    assert (np.asarray(l_j) == np.asarray(l_p)).all()
+    assert int(p_j) == int(p_p)
+
+
+@given(seed=st.integers(0, 100_000), n_jobs=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_chain_pallas_matches_sequential_host_admission(seed, n_jobs):
+    """The burst-admission contract through the kernel: one chained
+    dispatch with use_pallas=True ≡ sequential host WF with eq. 2
+    commits — the same oracle the jnp chain is held to."""
+    rng = np.random.default_rng(seed)
+    m = 12
+    base_busy = rng.integers(0, 10, m)
+    probs = [_problem(rng, m=m, busy=base_busy) for _ in range(n_jobs)]
+    chained = wf_jax.water_filling_jax_chain(probs, use_pallas=True)
+    busy = base_busy.copy()
+    for prob, got in zip(probs, chained):
+        seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)
+        host = water_filling(seq)
+        got.validate(prob)
+        assert got.alloc == host.alloc
+        assert got.phi == host.phi
+        busy = commit_busy(busy, host, seq.mu, m)

@@ -32,6 +32,14 @@ Results land in ``results/BENCH_waterlevel.json`` (uploaded nightly next
 to the matrix CSVs).  On CPU the kernel runs in interpret mode, so the
 sweep tracks correctness + jnp-path latency there; the Pallas column is
 only meaningful on real TPU.
+
+``--placement-churn`` runs the placement-churn scenario: the bursty
+trace generated through a :class:`repro.placement.PlacementStore`, with
+replica evictions and periodic rebalances injected as placement events,
+swept over {replication policy × re-replication cadence}.  Metrics show
+what re-replication buys under churn (JCT, failed jobs, stranded-task
+reassignments); rows land in ``results/placement_churn.csv`` (uploaded
+nightly).
 """
 
 from __future__ import annotations
@@ -42,13 +50,31 @@ import os
 import time
 
 from repro.runtime import SchedulingEngine, list_policies, make_policy
-from repro.traces import TRACES, generate
+from repro.traces import available_scenarios, generate
 
 from .common import RESULTS_DIR, emit, summarize, write_csv
 
 DEFAULT_ORDERINGS = ("fifo", "ocwf-acc", "setf")
 
 WATERLEVEL_MS = (64, 512, 4096, 16384)
+
+# re-replication cadence sweep: rebalance every N slots (0 = never)
+CHURN_CADENCES = (0, 16, 4)
+CHURN_EVICT_RATE = 0.3  # per-slot replica-eviction probability
+
+CHURN_FIELDS = [
+    "repl_policy",
+    "rebalance_every",
+    "evict_rate",
+    "mean_jct",
+    "p99_jct",
+    "failed_jobs",
+    "reassigned",
+    "replicas_added",
+    "replicas_evicted",
+    "makespan",
+    "wall_s",
+]
 
 FIELDS = [
     "scenario",
@@ -73,10 +99,18 @@ def run_matrix(
     assigners: tuple[str, ...],
     trace_kw: dict,
 ) -> list[dict]:
+    import dataclasses
+
+    from repro.traces import TRACES
+
     rows: list[dict] = []
     for scenario in scenarios:
-        jobs_kw = dict(trace_kw)
-        n_servers = jobs_kw["n_servers"]
+        # keep only the knobs this scenario's config has: the CSV replay
+        # (cluster_v2017) brings its own task counts, so e.g. total_tasks
+        # doesn't apply there
+        fields = {f.name for f in dataclasses.fields(TRACES[scenario][0])}
+        jobs_kw = {k: v for k, v in trace_kw.items() if k in fields}
+        n_servers = trace_kw["n_servers"]
         jobs = generate(scenario, **jobs_kw)
         for assign in assigners:
             for ordering in orderings:
@@ -184,20 +218,110 @@ def run_waterlevel_sweep(
     return payload
 
 
-def print_table(rows: list[dict]) -> None:
-    cols = ["scenario", "assign", "ordering", "mean_jct", "p99_jct",
-            "mean_overhead_us", "makespan"]
+def run_placement_churn(
+    *,
+    smoke: bool = False,
+    cadences: tuple[int, ...] = CHURN_CADENCES,
+    evict_rate: float = CHURN_EVICT_RATE,
+    out_csv: str = "placement_churn.csv",
+) -> list[dict]:
+    """The placement-churn scenario: {replication policy × cadence}.
+
+    Every cell regenerates the bursty trace through a fresh
+    ``PlacementStore`` (same seed → same initial placement for every
+    policy), injects a deterministic churn timeline (per-slot replica
+    evictions at ``evict_rate`` + a rebalance every ``cadence`` slots),
+    and drives the engine under WF.  Evictions strand queued fragments
+    through the fault path; rebalances run the store's replication
+    policy — so the sweep shows what each re-replication policy buys
+    back (fewer failed jobs / reassignments, lower JCT) as the cadence
+    tightens.  Blocks get 2-4 initial replicas (instead of the matrix's
+    8-12) so churn actually bites: losing a replica narrows an eligible
+    set by 25-50% and last-replica evictions are reachable.
+    """
+    from repro.placement import (
+        HotBlockPolicy,
+        PlacementStore,
+        churn_timeline,
+        list_replication_policies,
+    )
+
+    if smoke:
+        trace_kw = dict(n_jobs=25, total_tasks=4_000, n_servers=25, seed=0)
+    else:
+        trace_kw = dict(n_jobs=120, total_tasks=40_000, n_servers=60, seed=0)
+    trace_kw.update(avail_lo=2, avail_hi=4)
+    n_servers = trace_kw["n_servers"]
+
+    def churn_policy(name: str):
+        """Benchmark-scaled policy instances (the class defaults target
+        serve blocks with ~2 replicas, not 2-4-replica data blocks)."""
+        if name == "hot-block":
+            return HotBlockPolicy(max_replicas=6, min_replicas=2, add_budget=16)
+        return name
+
+    rows: list[dict] = []
+    for repl_policy in list_replication_policies():
+        for every in cadences:
+            store = PlacementStore(n_servers, policy=churn_policy(repl_policy))
+            jobs = generate("bursty", store=store, **trace_kw)
+            horizon = (
+                max(j.arrival for j in jobs)
+                + trace_kw["total_tasks"] // n_servers
+                + 50
+            )
+            events = churn_timeline(
+                store,
+                horizon=horizon,
+                rebalance_every=every,
+                evict_rate=evict_rate,
+                seed=trace_kw["seed"] + 1,
+            )
+            engine = SchedulingEngine(
+                n_servers, make_policy("wf"), events=events, placement=store
+            )
+            t0 = time.perf_counter()
+            res = engine.run(jobs)
+            wall = time.perf_counter() - t0
+            row = {
+                "repl_policy": repl_policy,
+                "rebalance_every": every,
+                "evict_rate": evict_rate,
+                "mean_jct": round(res.mean_jct, 3),
+                "p99_jct": round(res.jct_percentile(99), 3),
+                "failed_jobs": len(res.failed_jobs),
+                "reassigned": res.reassignments,
+                "replicas_added": store.replicas_added,
+                "replicas_evicted": store.replicas_evicted,
+                "makespan": res.makespan,
+                "wall_s": round(wall, 3),
+            }
+            rows.append(row)
+            emit(
+                f"placement_churn/{repl_policy}/every{every}",
+                res.mean_overhead_s * 1e6,
+                res.mean_jct,
+            )
+    write_csv(os.path.join(RESULTS_DIR, out_csv), rows, CHURN_FIELDS)
+    print(f"# placement churn table written to results/{out_csv}", flush=True)
+    return rows
+
+
+def print_table(rows: list[dict], cols: list[str] | None = None) -> None:
+    cols = cols or ["scenario", "assign", "ordering", "mean_jct", "p99_jct",
+                    "mean_overhead_us", "makespan"]
     widths = {
         c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols
     }
     header = "  ".join(c.ljust(widths[c]) for c in cols)
     print("\n" + header)
     print("-" * len(header))
-    prev_scenario = None
+    prev_group = None
     for r in rows:
-        if r["scenario"] != prev_scenario and prev_scenario is not None:
+        group = r[cols[0]]
+        if group != prev_group and prev_group is not None:
             print()
-        prev_scenario = r["scenario"]
+        prev_group = group
         print("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
 
 
@@ -205,8 +329,10 @@ def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true", help="CI-sized matrix")
     parser.add_argument(
-        "--scenarios", default=",".join(sorted(TRACES)),
-        help="comma-separated trace scenarios",
+        "--scenarios", default=",".join(available_scenarios()),
+        help="comma-separated trace scenarios (default: every scenario "
+        "that can generate here — cluster_v2017 joins when its CSV is "
+        "present)",
     )
     parser.add_argument(
         "--orderings", default=",".join(DEFAULT_ORDERINGS),
@@ -230,12 +356,29 @@ def main(argv: list[str] | None = None) -> None:
         help="benchmark the water-level primitive (jnp vs Pallas) across "
         "M and emit results/BENCH_waterlevel.json instead of the matrix",
     )
+    parser.add_argument(
+        "--placement-churn", action="store_true",
+        help="run the placement-churn scenario ({replication policy × "
+        "re-replication cadence} under replica evictions) and emit "
+        "results/placement_churn.csv instead of the matrix",
+    )
     args = parser.parse_args(argv)
 
     if args.waterlevel_sweep:
         if not args.no_header:
             print("name,us_per_call,derived", flush=True)
         run_waterlevel_sweep(iters=3 if args.smoke else 10)
+        return
+
+    if args.placement_churn:
+        if not args.no_header:
+            print("name,us_per_call,derived", flush=True)
+        rows = run_placement_churn(smoke=args.smoke)
+        print_table(
+            rows,
+            ["repl_policy", "rebalance_every", "mean_jct", "p99_jct",
+             "failed_jobs", "reassigned", "replicas_added", "makespan"],
+        )
         return
 
     if args.smoke:

@@ -30,7 +30,13 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "read_manifest",
+    "latest_step",
+    "CheckpointManager",
+]
 
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
@@ -92,6 +98,35 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_manifest(directory: str, step: int) -> dict:
+    """Load + schema-validate ``step_<N>/manifest.json``.
+
+    The validated manifest is the contract both restore and the
+    placement layer (:mod:`repro.placement.checkpoint`) rely on: a
+    ``step`` and a ``leaves`` list whose entries carry ``file``/``name``/
+    ``shape``/``dtype``/``crc32``.  Raises :class:`FileNotFoundError`
+    when the step directory is missing and :class:`ValueError` on a
+    malformed manifest.
+    """
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    if not os.path.isfile(path):
+        raise FileNotFoundError(f"no checkpoint manifest at {path!r}")
+    with open(path) as f:
+        manifest = json.load(f)
+    if not isinstance(manifest, dict) or "step" not in manifest:
+        raise ValueError(f"malformed manifest {path!r}: missing 'step'")
+    leaves = manifest.get("leaves")
+    if not isinstance(leaves, list):
+        raise ValueError(f"malformed manifest {path!r}: missing 'leaves' list")
+    for i, leaf in enumerate(leaves):
+        missing = {"file", "name", "shape", "dtype", "crc32"} - set(leaf)
+        if missing:
+            raise ValueError(
+                f"malformed manifest {path!r}: leaf {i} missing {sorted(missing)}"
+            )
+    return manifest
+
+
 def restore_checkpoint(
     directory: str, step: int, like: Any, shardings: Any | None = None
 ) -> Any:
@@ -102,8 +137,7 @@ def restore_checkpoint(
     re-placed from scratch.
     """
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(directory, step)
     flat_like, treedef = jax.tree_util.tree_flatten(like)
     if len(manifest["leaves"]) != len(flat_like):
         raise ValueError(

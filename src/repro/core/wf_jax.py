@@ -174,13 +174,69 @@ def _water_fill_groups_jnp(busy, mu, group_mask, demands):
     return water_fill_groups(busy, mu, group_mask, demands, use_pallas=False)
 
 
-# batched over B *independent* arrival instances (per-problem busy
-# snapshots). NOTE: results are only mutually consistent if the problems
-# target disjoint queues — same-slot admission must use the chained scan
-# below, which commits eq. 2 between jobs.  Pinned to the jnp water level:
-# a vmapped pallas_call is untested, and an auto-resolved backend inside
-# the jit would be baked into the cache (see ROADMAP for the TPU follow-up).
-water_fill_batch = jax.vmap(_water_fill_groups_jnp, in_axes=(0, 0, 0, 0))
+# the jnp backend for B independent instances: plain vmap of the groups scan
+_water_fill_batch_vmap = jax.vmap(_water_fill_groups_jnp, in_axes=(0, 0, 0, 0))
+
+
+def _water_fill_groups_batch_pallas(busy, mu, group_mask, demands):
+    """Pallas backend for B independent instances: one scan over the K
+    groups whose per-step allocation is a single batched-grid kernel call
+    (``water_fill_alloc_pallas_batch``) over all B rows.
+
+    Row ``i`` evolves exactly like ``water_fill_groups(busy[i], …,
+    use_pallas=True)`` — same eq. 10 busy carry, same Φ reduction — and
+    the batched kernel is row-wise bit-identical to the single-problem
+    kernel, so the whole thing is bit-identical to the vmapped jnp path.
+    """
+    from repro.kernels.waterlevel import water_fill_alloc_pallas_batch
+
+    mu = mu.astype(jnp.int32)
+
+    def step(b, inputs):
+        m_k, d_k = inputs  # (B, M) mask, (B,) demand for group k
+        alloc_k, xi = water_fill_alloc_pallas_batch(b, mu, m_k, d_k)
+        b_next = jnp.where(
+            m_k & (d_k > 0)[:, None], jnp.maximum(b, xi[:, None]), b
+        )  # eq. 10
+        return b_next, (alloc_k, xi)
+
+    _, (alloc, levels) = jax.lax.scan(
+        step,
+        busy.astype(jnp.int32),
+        (
+            jnp.moveaxis(group_mask, 1, 0),
+            jnp.moveaxis(demands.astype(jnp.int32), 1, 0),
+        ),
+    )
+    alloc = jnp.moveaxis(alloc, 0, 1)  # (K, B, M) -> (B, K, M)
+    levels = jnp.moveaxis(levels, 0, 1)  # (K, B) -> (B, K)
+    phi = jnp.max(jnp.where(demands > 0, levels, 0), axis=1)
+    return alloc, levels, phi
+
+
+def water_fill_batch(
+    busy: jax.Array,
+    mu: jax.Array,
+    group_mask: jax.Array,
+    demands: jax.Array,
+    *,
+    use_pallas: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """WF over B *independent* arrival instances (per-problem busy
+    snapshots): (B,M) busy/mu, (B,K,M) masks, (B,K) demands →
+    ((B,K,M) alloc, (B,K) levels, (B,) Φ).
+
+    NOTE: results are only mutually consistent if the problems target
+    disjoint queues — same-slot admission must use
+    :func:`water_fill_chain`, which commits eq. 2 between jobs.
+
+    ``use_pallas`` picks the backend (``None`` = auto): the jnp path is
+    a vmapped groups scan; the Pallas path runs each group step as one
+    batched-grid kernel call over all B rows — bit-identical results.
+    """
+    if _resolve_pallas(use_pallas, busy.shape[-1]):
+        return _water_fill_groups_batch_pallas(busy, mu, group_mask, demands)
+    return _water_fill_batch_vmap(busy, mu, group_mask, demands)
 
 
 def water_fill_chain(
@@ -193,7 +249,7 @@ def water_fill_chain(
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sequential admission of B jobs in one scan, carrying busy levels.
 
-    Unlike :data:`water_fill_batch` (independent problems, shared stale
+    Unlike :func:`water_fill_batch` (independent problems, shared stale
     busy snapshot), the chain commits eq. 2 *between* jobs: job ``i+1``
     sees ``b_m + ⌈load_m^i/μ_m^i⌉`` exactly as if the jobs were admitted
     one at a time — so a same-slot burst collapses to one device dispatch
@@ -228,7 +284,7 @@ def water_fill_chain(
 
 
 _wf_groups_jit = jax.jit(water_fill_groups, static_argnames="use_pallas")
-_wf_batch_jit = jax.jit(water_fill_batch)
+_wf_batch_jit = jax.jit(water_fill_batch, static_argnames="use_pallas")
 _wf_chain_jit = jax.jit(water_fill_chain, static_argnames="use_pallas")
 
 
@@ -326,8 +382,10 @@ def water_filling_jax(
     return _to_assignment(problem, np.asarray(alloc), int(phi))
 
 
-def water_filling_jax_batch(problems: list[AssignmentProblem]) -> list[Assignment]:
-    """Batched WF over *independent* problems: one vmapped device call.
+def water_filling_jax_batch(
+    problems: list[AssignmentProblem], *, use_pallas: bool | None = None
+) -> list[Assignment]:
+    """Batched WF over *independent* problems: one batched device call.
 
     All problems must share the same server count (one cluster); busy
     times are per-problem and are NOT carried across jobs, so the results
@@ -335,8 +393,10 @@ def water_filling_jax_batch(problems: list[AssignmentProblem]) -> list[Assignmen
     For same-slot arrival bursts — where each job must see the busy times
     left by its predecessors — use :func:`water_filling_jax_chain`.
 
-    Always runs the jnp water level (no Pallas dispatch under vmap yet —
-    see the ROADMAP open item).
+    ``use_pallas`` picks the water-level backend (``None`` = auto: the
+    batched-grid Pallas kernel on TPU, the vmapped jnp pipeline
+    elsewhere; ``REPRO_WATERLEVEL_BACKEND`` overrides) — assignments are
+    bit-identical either way.
     """
     if not problems:
         return []
@@ -346,7 +406,11 @@ def water_filling_jax_batch(problems: list[AssignmentProblem]) -> list[Assignmen
     k_pad = _pad_k(max(len(p.groups) for p in problems))
     busy, mu, masks, demands = _dense_inputs(problems, k_pad)
     alloc, _, phi = _wf_batch_jit(
-        jnp.asarray(busy), jnp.asarray(mu), jnp.asarray(masks), jnp.asarray(demands)
+        jnp.asarray(busy), jnp.asarray(mu), jnp.asarray(masks),
+        jnp.asarray(demands),
+        # resolve before the jit boundary so the cache keys on the
+        # concrete backend (env overrides stay effective per call)
+        use_pallas=_resolve_pallas(use_pallas, m),
     )
     alloc = np.asarray(alloc)
     phi = np.asarray(phi)

@@ -54,6 +54,7 @@ __all__ = [
     "resolve_use_pallas",
     "water_level_pallas",
     "water_fill_alloc_pallas",
+    "water_fill_alloc_pallas_batch",
 ]
 
 # must match repro.core.wf_jax._BIG: masked servers sort to this sentinel
@@ -233,6 +234,51 @@ def _waterlevel_call_padded(
     return level[0, 0], take[0], idx[0]
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _waterlevel_call_padded_batch(
+    b3: jax.Array, w3: jax.Array, d3: jax.Array, *, interpret: bool
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched-grid twin of :func:`_waterlevel_call_padded`.
+
+    ``b3``/``w3`` are ``(B, n_lanes)`` pre-masked rows, ``d3`` is
+    ``(B, 1)`` demands; the kernel body is *unchanged* — the grid's
+    ``B`` programs each see one ``(1, n_lanes)`` block, so every row is
+    bit-identical to the single-problem call (and hence to the jnp
+    path).  The stage tables stay whole-array SMEM inputs shared by all
+    programs.
+    """
+    bsz, n_lanes = b3.shape
+    ks, js = _bitonic_stages(n_lanes)
+    row_spec = pl.BlockSpec(
+        (1, n_lanes), lambda b: (b, 0), memory_space=pltpu.VMEM
+    )
+    level, take, idx = pl.pallas_call(
+        functools.partial(
+            _waterlevel_kernel, n_lanes=n_lanes, n_stages=len(ks)
+        ),
+        grid=(bsz,),
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, n_lanes), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, n_lanes), jnp.int32),
+        ],
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            row_spec,
+            row_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b: (b, 0), memory_space=pltpu.SMEM),
+            row_spec,
+            row_spec,
+        ],
+        interpret=interpret,
+    )(d3, jnp.asarray(ks), jnp.asarray(js), b3, w3)
+    return level[:, 0], take, idx
+
+
 def _waterlevel_call(
     b: jax.Array, w: jax.Array, demand: jax.Array, *, interpret: bool
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -303,3 +349,35 @@ def water_fill_alloc_pallas(
     level, take, idx = _waterlevel_call(b, w, demand, interpret=_interp(interpret))
     alloc = jnp.zeros(b.shape[0], jnp.int32).at[idx].set(take, mode="drop")
     return alloc, jnp.where(demand > 0, level, b.min())
+
+
+def water_fill_alloc_pallas_batch(
+    busy: jax.Array,
+    mu: jax.Array,
+    mask: jax.Array,
+    demand: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched kernel twin of :func:`water_fill_alloc_pallas`.
+
+    ``busy``/``mu``/``mask`` are ``(B, M)``, ``demand`` is ``(B,)``; one
+    ``pallas_call`` over a ``(B,)`` grid computes every row's level and
+    sorted takes, then a single scatter restores the per-row server
+    order.  Row ``i`` is bit-identical to
+    ``water_fill_alloc_pallas(busy[i], mu[i], mask[i], demand[i])``.
+    """
+    b, w = _masked_inputs(busy, mu, mask)
+    demand = jnp.asarray(demand, jnp.int32)
+    bsz, m = b.shape
+    n_lanes = max(_LANES, _next_pow2(m))
+    pad = n_lanes - m
+    b3 = jnp.pad(b, ((0, 0), (0, pad)), constant_values=_BIG)
+    w3 = jnp.pad(w, ((0, 0), (0, pad)))
+    d3 = demand.reshape(bsz, 1)
+    level, take, idx = _waterlevel_call_padded_batch(
+        b3, w3, d3, interpret=_interp(interpret)
+    )
+    rows = jnp.arange(bsz)[:, None]
+    alloc = jnp.zeros((bsz, m), jnp.int32).at[rows, idx].set(take, mode="drop")
+    return alloc, jnp.where(demand > 0, level, b.min(axis=1))

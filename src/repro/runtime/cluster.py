@@ -141,6 +141,34 @@ class ClusterState:
         # queue was drained at failure, so the busy contribution is zero
         assert not self.queues[m], "recovered server has a non-empty queue"
 
+    # ---- replica eviction (placement layer) ------------------------------
+
+    def evict_queued(self, m: int, job_id: int, g: int) -> int:
+        """Strand queued group-``g`` tasks of ``job_id`` on server ``m``.
+
+        The placement analogue of :meth:`fail_server`: when server ``m``
+        loses its replica of the block group ``g`` reads, the tasks
+        queued there can no longer run locally and must be re-placed.
+        Removes the matching per-group entries (other groups sharing a
+        segment stay queued), keeps the incremental busy vector in step,
+        and returns the stranded task count.
+        """
+        taken = 0
+        q = self.queues[m]
+        track = not self._busy_stale and self.alive[m]
+        for seg in list(q):
+            if seg.job_id != job_id or g not in seg.per_group:
+                continue
+            cost_before = self._segment_cost(seg, m) if track else 0
+            cnt = seg.per_group.pop(g)
+            seg.total -= cnt
+            taken += cnt
+            if track:
+                self._busy[m] -= cost_before - self._segment_cost(seg, m)
+            if seg.total == 0:
+                q.remove(seg)
+        return taken
+
     # ---- job bookkeeping -------------------------------------------------
 
     def mark_failed(self, job_id: int) -> None:

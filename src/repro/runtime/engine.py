@@ -20,6 +20,17 @@ failure / slowdown) with locality-aware reassignment of affected tasks;
 a failed server's stranded fragments are merged per job before
 reassignment so the policy re-places each job's tasks jointly.
 
+With a :class:`repro.placement.PlacementStore`, eligible sets become
+*runtime state*: placement-backed jobs (:class:`repro.placement.
+PlacedJob`) re-resolve their groups from the live store at arrival, and
+:class:`repro.placement.PlacementEvent`\\ s ride the same timeline as
+fault events — a deleted replica strands the queued fragments that read
+its block exactly like a server failure (re-placed per job through the
+policy), a replica add widens the locality sets of queued and future
+jobs, and a rebalance runs the store's replication policy with evictions
+routed through the stranding path.  With a static store and no placement
+events the realized schedule is bit-identical to frozen-tuple traces.
+
 State lives in :class:`repro.runtime.cluster.ClusterState`; events in
 :class:`repro.runtime.events.EventTimeline`; policies in
 :mod:`repro.runtime.policies`.
@@ -33,7 +44,8 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import AssignmentProblem, Job, OutstandingJob
+from repro.core import AssignmentProblem, Job, OutstandingJob, TaskGroup
+from repro.placement import PlacedJob, PlacementEvent, PlacementStore
 
 from .cluster import ClusterState
 from .events import EventTimeline, ServerEvent
@@ -81,7 +93,8 @@ class SchedulingEngine:
         n_servers: int,
         policy: SchedulingPolicy | Policy | str = "wf",
         *,
-        events: tuple[ServerEvent, ...] = (),
+        events: tuple[ServerEvent | PlacementEvent, ...] = (),
+        placement: PlacementStore | None = None,
         max_slots: int = 10_000_000,
         on_slot: Callable[[ClusterState, int], None] | None = None,
         debug: bool = False,
@@ -90,11 +103,23 @@ class SchedulingEngine:
         self.n_servers = n_servers
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
         self.events = tuple(sorted(events, key=lambda e: e.slot))
+        self.placement = placement
+        if placement is not None and placement.n_servers != n_servers:
+            raise ValueError(
+                f"placement store spans {placement.n_servers} servers, "
+                f"engine drives {n_servers}"
+            )
+        if placement is None and any(
+            isinstance(e, PlacementEvent) for e in self.events
+        ):
+            raise ValueError("placement events require a placement store")
         self.max_slots = max_slots
         self.on_slot = on_slot  # observability/test hook, called once per slot
         self.debug = debug
         self.batch_arrivals = batch_arrivals
         self.cluster: ClusterState | None = None  # populated by run()
+        # block -> [(job_id, original gid)] for arrived placement-backed jobs
+        self._block_groups: dict[str, list[tuple[int, int]]] = {}
 
     # ---- reordering ------------------------------------------------------
 
@@ -174,12 +199,136 @@ class SchedulingEngine:
             cluster.slow[m] = 1.0
             cluster.invalidate_mu()
 
+    # ---- placement changes -----------------------------------------------
+
+    def _live_block_groups(self, block: str) -> list[tuple[int, int]]:
+        """(job_id, gid) pairs of arrived, still-live jobs reading ``block``."""
+        cluster = self.cluster
+        return [
+            (job_id, g)
+            for job_id, g in self._block_groups.get(block, ())
+            if job_id in cluster.remaining
+        ]
+
+    def _set_group_servers(
+        self, job_id: int, g: int, servers: tuple[int, ...]
+    ) -> None:
+        cluster = self.cluster
+        job = cluster.jobs[job_id]
+        groups = list(job.groups)
+        groups[g] = TaskGroup(job.groups[g].size, servers)
+        cluster.jobs[job_id] = dataclasses.replace(job, groups=tuple(groups))
+
+    def _widen_block(self, block: str, server: int) -> bool:
+        """A new replica of ``block`` on ``server``: live jobs reading it
+        may now also run there (future jobs re-resolve at arrival).
+        Returns True when a live job's locality set actually widened."""
+        widened = False
+        for job_id, g in self._live_block_groups(block):
+            servers = self.cluster.jobs[job_id].groups[g].servers
+            if server not in servers:
+                self._set_group_servers(
+                    job_id, g, tuple(sorted(servers + (server,)))
+                )
+                widened = True
+        return widened
+
+    def _evict_replica(self, block: str, server: int) -> None:
+        """Delete ``block``'s replica on ``server``: strand the queued
+        fragments that read it (exactly like a server fault strands a
+        queue) and re-place them per job; narrow live locality sets; a
+        group losing its last replica fails its job."""
+        if not self.placement.evict(block, server):
+            return  # replica already gone (stale churn event) — no-op
+        cluster = self.cluster
+        affected = self._live_block_groups(block)
+        stranded: dict[int, dict[int, int]] = {}
+        for job_id, g in affected:
+            cnt = cluster.evict_queued(server, job_id, g)
+            if cnt:
+                stranded.setdefault(job_id, {})[g] = cnt
+        for job_id, g in affected:
+            if job_id in cluster.failed:
+                continue
+            remaining = tuple(
+                s for s in cluster.jobs[job_id].groups[g].servers if s != server
+            )
+            if remaining:
+                self._set_group_servers(job_id, g, remaining)
+            elif stranded.get(job_id, {}).get(g):
+                # last replica gone with unprocessed tasks: data loss
+                cluster.mark_failed(job_id)
+            # else: the group is fully processed — nothing to narrow
+        for job_id, per_group in stranded.items():
+            if job_id in cluster.failed:
+                continue
+            job = cluster.jobs[job_id]
+            proj = cluster.project(job, per_group)
+            if proj is None:
+                cluster.mark_failed(job_id)
+                continue
+            groups, gids = proj
+            prob = cluster.problem_for(job, groups)
+            assignment = self.policy.assign(prob)
+            if self.debug:
+                assignment.validate(prob)
+            cluster.enqueue(job_id, assignment, gids)
+            cluster.reassigned += sum(per_group.values())
+
+    def _apply_placement_event(self, ev: PlacementEvent) -> None:
+        store = self.placement
+        widened = False
+        if ev.kind == "add":
+            if ev.block in store and store.add_replica(ev.block, ev.server):
+                widened = self._widen_block(ev.block, ev.server)
+        elif ev.kind == "evict":
+            if ev.block in store:
+                self._evict_replica(ev.block, ev.server)
+        elif ev.kind == "join":
+            store.server_join(ev.server)
+        elif ev.kind == "leave":
+            for block in store.blocks_on(ev.server):
+                self._evict_replica(block, ev.server)
+            store.server_leave(ev.server)
+        elif ev.kind == "rebalance":
+            delta = store.propose(np.random.default_rng(ev.seed))
+            for block, server in delta.added:
+                if block in store and store.add_replica(block, server):
+                    widened |= self._widen_block(block, server)
+            for block, server in delta.evicted:
+                if block in store:
+                    self._evict_replica(block, server)
+        if widened and self.policy.reorders:
+            # a wider locality set is only realized by re-placing queued
+            # work — same rebalance trigger as the slowdown handler
+            self._reschedule()
+
     # ---- arrivals --------------------------------------------------------
+
+    def _resolve_placed(self, job: Job) -> Job | None:
+        """Re-resolve a placement-backed job's groups from the live store
+        at arrival; returns None (job marked failed) if any block's data
+        is gone.  Plain jobs (or no store) pass through untouched."""
+        store = self.placement
+        if store is None or not isinstance(job, PlacedJob):
+            return job
+        resolved = job.resolve(store)
+        if resolved is None:
+            self.cluster.mark_failed(job.job_id)
+            return None
+        self.cluster.jobs[job.job_id] = resolved
+        for g, (grp, block) in enumerate(zip(resolved.groups, resolved.blocks)):
+            self._block_groups.setdefault(block, []).append((job.job_id, g))
+            store.record_access(block, grp.size)
+        return resolved
 
     def _admit_one(self, job: Job) -> float | None:
         """Place one arriving job; returns scheduling wall time (None if
         the job's data is already unavailable)."""
         cluster = self.cluster
+        job = self._resolve_placed(job)
+        if job is None:
+            return None
         proj = cluster.project(
             job, {g: grp.size for g, grp in enumerate(job.groups)}
         )
@@ -213,6 +362,9 @@ class SchedulingEngine:
         cluster = self.cluster
         admitted: list[tuple[Job, tuple, list[int]]] = []
         for job in batch:
+            job = self._resolve_placed(job)
+            if job is None:
+                continue
             proj = cluster.project(
                 job, {g: grp.size for g, grp in enumerate(job.groups)}
             )
@@ -307,6 +459,7 @@ class SchedulingEngine:
         self.cluster = cluster = ClusterState(
             self.n_servers, {j.job_id: j for j in jobs}, debug=self.debug
         )
+        self._block_groups = {}
         timeline = EventTimeline(self.events)
         arrivals = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
         jct: dict[int, int] = {}
@@ -314,7 +467,10 @@ class SchedulingEngine:
         ai = slot = 0
         while slot < self.max_slots:
             for ev in timeline.due(slot):
-                self._apply_event(ev)
+                if isinstance(ev, PlacementEvent):
+                    self._apply_placement_event(ev)
+                else:
+                    self._apply_event(ev)
             batch: list[Job] = []
             while ai < len(arrivals) and arrivals[ai].arrival <= slot:
                 job = arrivals[ai]

@@ -143,6 +143,14 @@ class ReplicaRouter:
     busy time = queued tokens / replica throughput (eq. 2 analogue).
     ``policy`` is any name in :data:`repro.core.ALGORITHMS` (``"wf"``,
     ``"obta"``, ``"wf_jax"``, …) or a callable assignment function.
+
+    With ``placement`` (a :class:`repro.placement.PlacementStore`,
+    typically populated from checkpoint manifests via
+    :func:`repro.placement.register_checkpoint`), callers stop passing
+    ``eligible`` by hand: ``route(n, model="qwen", adapter="x")``
+    resolves the replicas holding *both* the model checkpoint and the
+    LoRA adapter, and records the access so hot-model re-replication can
+    widen the set on the next rebalance.
     """
 
     def __init__(
@@ -151,16 +159,57 @@ class ReplicaRouter:
         tokens_per_step: int = 1024,
         *,
         policy: str | AssignFn = "wf",
+        placement=None,
     ):
         self.n = n_replicas
         self.rate = np.full(n_replicas, tokens_per_step, np.int64)
         self.queued = np.zeros(n_replicas, np.int64)
         self.assign = get_assigner(policy) if isinstance(policy, str) else policy
+        if placement is not None and placement.n_servers != n_replicas:
+            raise ValueError(
+                f"placement store spans {placement.n_servers} servers, "
+                f"router has {n_replicas} replicas"
+            )
+        self.placement = placement
+
+    def _resolve_eligible(
+        self, n_tokens: int, model: str | None, adapter: str | None
+    ) -> tuple[int, ...] | None:
+        if model is None and adapter is None:
+            return None
+        if self.placement is None:
+            raise ValueError(
+                "routing by model/adapter ID needs a placement store "
+                "(pass placement= to ReplicaRouter)"
+            )
+        from repro.placement import lora_block, model_block
+
+        blocks = []
+        if model is not None:
+            blocks.append(model_block(model))
+        if adapter is not None:
+            blocks.append(lora_block(adapter))
+        eligible = self.placement.eligible(*blocks)
+        for block in blocks:
+            self.placement.record_access(block, n_tokens)
+        return eligible
 
     def route(
-        self, n_tokens: int, eligible: tuple[int, ...] | None = None
+        self,
+        n_tokens: int,
+        eligible: tuple[int, ...] | None = None,
+        *,
+        model: str | None = None,
+        adapter: str | None = None,
     ) -> dict[int, int]:
-        """Assign ``n_tokens`` of work; returns {replica: tokens}."""
+        """Assign ``n_tokens`` of work; returns {replica: tokens}.
+
+        ``eligible`` may be given explicitly (legacy callers) or derived
+        from placement via ``model``/``adapter`` IDs; without either,
+        every replica is eligible.
+        """
+        if eligible is None:
+            eligible = self._resolve_eligible(n_tokens, model, adapter)
         eligible = eligible or tuple(range(self.n))
         busy = -(-self.queued // self.rate)  # slots, eq. 2
         prob = AssignmentProblem(

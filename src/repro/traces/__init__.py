@@ -1,16 +1,21 @@
-"""Job traces: scenario registry over synthetic generators.
+"""Job traces: scenario registry over synthetic generators + CSV replay.
 
-Three scenarios share one group/placement/capacity model
+Four scenarios share one group/placement/capacity model
 (:mod:`repro.traces.placement`) and differ in size/arrival processes:
 
 - ``alibaba``        — the paper's Alibaba-v2017-matched segment;
 - ``bursty``         — Poisson bursts of same-slot arrivals;
-- ``pareto_diurnal`` — Pareto-tailed job sizes under a day/night rate.
+- ``pareto_diurnal`` — Pareto-tailed job sizes under a day/night rate;
+- ``cluster_v2017``  — replay of a real ``batch_task.csv`` segment
+  (requires the CSV on disk; see :func:`scenario_available`).
 
 ``generate(scenario, **overrides)`` makes scenario choice a config axis:
 overrides are applied onto the scenario's config dataclass, so sweeps like
 {policy × ordering × trace} (``benchmarks/policy_matrix.py``) stay pure
-configuration.
+configuration.  Pass ``store=`` (a :class:`repro.placement.
+PlacementStore`) to get placement-backed jobs whose eligible sets resolve
+from the store at arrival time — bit-identical to the frozen trace when
+the store is static.
 """
 
 from __future__ import annotations
@@ -21,18 +26,29 @@ from repro.core import Job
 
 from .alibaba_like import TraceConfig, generate_trace
 from .bursty import BurstyTraceConfig, generate_bursty_trace
+from .cluster_v2017 import (
+    ClusterTraceConfig,
+    generate_cluster_trace,
+    load_batch_task_csv,
+    trace_available,
+)
 from .pareto import ParetoTraceConfig, generate_pareto_trace
 
 __all__ = [
     "TraceConfig",
     "BurstyTraceConfig",
     "ParetoTraceConfig",
+    "ClusterTraceConfig",
     "generate_trace",
     "generate_bursty_trace",
     "generate_pareto_trace",
+    "generate_cluster_trace",
+    "load_batch_task_csv",
     "TRACES",
     "generate",
     "list_scenarios",
+    "scenario_available",
+    "available_scenarios",
 ]
 
 # scenario -> (config dataclass, generator)
@@ -40,19 +56,40 @@ TRACES: dict[str, tuple[type, Callable]] = {
     "alibaba": (TraceConfig, generate_trace),
     "bursty": (BurstyTraceConfig, generate_bursty_trace),
     "pareto_diurnal": (ParetoTraceConfig, generate_pareto_trace),
+    "cluster_v2017": (ClusterTraceConfig, generate_cluster_trace),
 }
 
 
-def generate(scenario: str, **overrides) -> list[Job]:
-    """Generate a trace by scenario name with config-field overrides."""
+def generate(scenario: str, *, store=None, **overrides) -> list[Job]:
+    """Generate a trace by scenario name with config-field overrides.
+
+    ``store`` (a :class:`repro.placement.PlacementStore`) switches the
+    scenario to placement-backed jobs; everything else is configuration.
+    """
     try:
         cfg_cls, gen = TRACES[scenario]
     except KeyError:
         raise KeyError(
             f"unknown trace scenario {scenario!r}; registered: {sorted(TRACES)}"
         ) from None
-    return gen(cfg_cls(**overrides))
+    return gen(cfg_cls(**overrides), store=store)
 
 
 def list_scenarios() -> list[str]:
     return sorted(TRACES)
+
+
+def scenario_available(scenario: str) -> bool:
+    """True when the scenario can generate right now — synthetic ones
+    always can; ``cluster_v2017`` needs its CSV on disk."""
+    if scenario not in TRACES:
+        return False
+    if scenario == "cluster_v2017":
+        return trace_available()
+    return True
+
+
+def available_scenarios() -> list[str]:
+    """Registered scenarios that can generate in this environment (what
+    benchmark sweeps should default to)."""
+    return [s for s in list_scenarios() if scenario_available(s)]

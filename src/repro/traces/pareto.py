@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import Job
 
-from .placement import build_job
+from .placement import build_job, normalize_sizes
 
 __all__ = ["ParetoTraceConfig", "generate_pareto_trace"]
 
@@ -49,13 +49,10 @@ class ParetoTraceConfig:
 
 def _pareto_sizes(cfg: ParetoTraceConfig, rng: np.random.Generator) -> np.ndarray:
     """Pareto task counts normalised to ``total_tasks`` (largest absorbs
-    rounding drift, same convention as the lognormal sizes)."""
-    raw = (1.0 + rng.pareto(cfg.pareto_alpha, size=cfg.n_jobs))
-    sizes = np.maximum(1, np.round(raw / raw.sum() * cfg.total_tasks)).astype(int)
-    sizes[np.argmax(sizes)] += cfg.total_tasks - int(sizes.sum())
-    if sizes.min() < 1:
-        sizes = np.maximum(sizes, 1)
-    return sizes
+    rounding drift, same ``Σ == total_tasks`` invariant as the lognormal
+    sizes via the shared :func:`repro.traces.placement.normalize_sizes`)."""
+    raw = 1.0 + rng.pareto(cfg.pareto_alpha, size=cfg.n_jobs)
+    return normalize_sizes(raw, cfg.total_tasks)
 
 
 def _diurnal_arrivals(
@@ -72,7 +69,10 @@ def _diurnal_arrivals(
     return np.floor(np.interp(u, cum, grid)).astype(int)
 
 
-def generate_pareto_trace(cfg: ParetoTraceConfig) -> list[Job]:
+def generate_pareto_trace(cfg: ParetoTraceConfig, store=None) -> list[Job]:
+    """Generate the trace; with a :class:`repro.placement.PlacementStore`
+    the jobs are placement-backed (``PlacedJob``, groups registered as
+    data blocks) — bit-identical to the frozen trace under a static store."""
     if not 0.0 <= cfg.diurnal_amplitude < 1.0:
         raise ValueError("diurnal_amplitude must be in [0, 1)")
     rng = np.random.default_rng(cfg.seed)
@@ -95,6 +95,7 @@ def generate_pareto_trace(cfg: ParetoTraceConfig) -> list[Job]:
             cap_lo=cfg.cap_lo,
             cap_hi=cfg.cap_hi,
             rng=rng,
+            store=store,
         )
         for j in range(cfg.n_jobs)
     ]

@@ -1,8 +1,9 @@
 """Shared building blocks for synthetic job traces.
 
-Every trace scenario (Alibaba-like, bursty, Pareto-diurnal) composes the
-same three ingredients from the paper's Sec. V-A setup — only the job-size
-and arrival processes differ per scenario:
+Every trace scenario (Alibaba-like, bursty, Pareto-diurnal, the
+cluster-trace-v2017 CSV replay) composes the same three ingredients from
+the paper's Sec. V-A setup — only the job-size and arrival processes
+differ per scenario:
 
 - heavy-tailed per-job task counts normalised to a target total;
 - a shifted-Poisson split of each job's tasks into task groups with a
@@ -10,39 +11,75 @@ and arrival processes differ per scenario:
 - the paper's data-placement model: a Zipf(α)-ranked anchor server in a
   random permutation, then ``p`` consecutive servers (mod M) form the
   group's available set.
+
+Placement can be frozen (the historical behavior: ``build_job`` bakes the
+server tuples into the trace) or *store-backed*: pass a
+:class:`repro.placement.PlacementStore` and each group becomes a named
+data block registered in the store, returned as a
+:class:`repro.placement.PlacedJob` whose eligible sets the engine
+re-resolves at arrival time.  Both paths consume the RNG identically, so
+with a static store the generated trace is bit-identical to the frozen
+one.
 """
 
 from __future__ import annotations
 
+from typing import TYPE_CHECKING
+
 import numpy as np
 
 from repro.core import Job, TaskGroup
+from repro.placement.store import zipf_servers, zipf_weights
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.placement import PlacementStore
 
 __all__ = [
     "zipf_weights",
     "group_split",
     "group_servers",
+    "normalize_sizes",
     "lognormal_sizes",
     "build_job",
 ]
 
 
-def zipf_weights(n: int, alpha: float) -> np.ndarray:
-    w = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** alpha
-    return w / w.sum()
+def normalize_sizes(raw: np.ndarray, total_tasks: int) -> np.ndarray:
+    """Integer job sizes proportional to ``raw``, each ≥ 1, summing to
+    ``total_tasks`` exactly.
+
+    Rounding drift lands on the largest job; if absorbing a deficit
+    pushes it (or anything) below 1 — pathological drift under extreme
+    skew — the undersized jobs are raised to 1 and the excess is shaved
+    off the largest jobs (each kept ≥ 1) instead of silently re-clamping,
+    so the ``sizes.sum() == total_tasks`` invariant always holds.
+    """
+    n = len(raw)
+    if total_tasks < n:
+        raise ValueError(
+            f"cannot split {total_tasks} tasks into {n} jobs of ≥1 task each"
+        )
+    sizes = np.maximum(1, np.round(raw / raw.sum() * total_tasks)).astype(int)
+    sizes[np.argmax(sizes)] += total_tasks - int(sizes.sum())
+    if sizes.min() < 1:
+        sizes = np.maximum(sizes, 1)
+        excess = int(sizes.sum()) - total_tasks
+        for i in np.argsort(sizes, kind="stable")[::-1]:
+            if excess <= 0:
+                break
+            take = min(excess, int(sizes[i]) - 1)
+            sizes[i] -= take
+            excess -= take
+    return sizes
 
 
 def lognormal_sizes(
     n_jobs: int, total_tasks: int, rng: np.random.Generator, sigma: float = 1.6
 ) -> np.ndarray:
     """Heavy-tailed task counts summing to ``total_tasks``."""
-    raw = rng.lognormal(mean=0.0, sigma=sigma, size=n_jobs)
-    sizes = np.maximum(1, np.round(raw / raw.sum() * total_tasks)).astype(int)
-    # fix rounding drift on the largest job
-    sizes[np.argmax(sizes)] += total_tasks - int(sizes.sum())
-    if sizes.min() < 1:  # pathological drift; re-clamp
-        sizes = np.maximum(sizes, 1)
-    return sizes
+    return normalize_sizes(
+        rng.lognormal(mean=0.0, sigma=sigma, size=n_jobs), total_tasks
+    )
 
 
 def group_split(
@@ -70,12 +107,10 @@ def group_servers(
     avail_hi: int,
 ) -> tuple[int, ...]:
     """Paper's placement: Zipf-ranked anchor in a random permutation, then
-    ``p`` consecutive servers."""
-    perm = rng.permutation(n_servers)
-    weights = zipf_weights(n_servers, zipf_alpha)
-    anchor = int(perm[rng.choice(n_servers, p=weights)])
-    p = int(rng.integers(avail_lo, avail_hi + 1))
-    return tuple(sorted({(anchor + i) % n_servers for i in range(p)}))
+    ``p`` consecutive servers (delegates to the placement subsystem's
+    :func:`repro.placement.zipf_servers` — one implementation, so frozen
+    and store-backed traces stay bit-identical)."""
+    return zipf_servers(n_servers, rng, zipf_alpha, avail_lo, avail_hi)
 
 
 def build_job(
@@ -84,18 +119,65 @@ def build_job(
     n_tasks: int,
     *,
     n_servers: int,
-    mean_groups: float,
+    mean_groups: float = 0.0,
     zipf_alpha: float,
     avail_lo: int,
     avail_hi: int,
     cap_lo: int,
     cap_hi: int,
     rng: np.random.Generator,
+    store: "PlacementStore | None" = None,
+    group_sizes: list[int] | None = None,
 ) -> Job:
-    """One job under the shared group/placement/capacity model."""
-    groups = tuple(
-        TaskGroup(gs, group_servers(n_servers, rng, zipf_alpha, avail_lo, avail_hi))
-        for gs in group_split(n_tasks, mean_groups, rng)
-    )
+    """One job under the shared group/placement/capacity model.
+
+    Group sizes come from the shifted-Poisson/Dirichlet split
+    (``mean_groups``) unless the caller already knows them
+    (``group_sizes`` — the CSV replay's one-group-per-trace-entry case).
+    With ``store`` given, every group's replica set is registered as a
+    ``data/j<job>/g<k>`` block and the returned job is a
+    :class:`repro.placement.PlacedJob` carrying the block names; the RNG
+    stream is consumed identically either way.
+    """
+    if group_sizes is None:
+        if mean_groups <= 0:
+            raise ValueError(
+                "build_job needs mean_groups > 0 or explicit group_sizes"
+            )
+        sizes = group_split(n_tasks, mean_groups, rng)
+    else:
+        sizes = group_sizes
+    if store is None:
+        groups = tuple(
+            TaskGroup(
+                gs, group_servers(n_servers, rng, zipf_alpha, avail_lo, avail_hi)
+            )
+            for gs in sizes
+        )
+        mu = rng.integers(cap_lo, cap_hi + 1, size=n_servers)
+        return Job(job_id=job_id, arrival=arrival, groups=groups, mu=mu)
+
+    from repro.placement import PlacedJob, data_block
+
+    if store.n_servers != n_servers:
+        raise ValueError(
+            f"placement store spans {store.n_servers} servers, "
+            f"trace wants {n_servers}"
+        )
+    groups_l: list[TaskGroup] = []
+    blocks: list[str] = []
+    for k, gs in enumerate(sizes):
+        block = data_block(job_id, k)
+        servers = store.place_block(
+            block, rng, zipf_alpha=zipf_alpha, avail_lo=avail_lo, avail_hi=avail_hi
+        )
+        groups_l.append(TaskGroup(gs, servers))
+        blocks.append(block)
     mu = rng.integers(cap_lo, cap_hi + 1, size=n_servers)
-    return Job(job_id=job_id, arrival=arrival, groups=groups, mu=mu)
+    return PlacedJob(
+        job_id=job_id,
+        arrival=arrival,
+        groups=tuple(groups_l),
+        mu=mu,
+        blocks=tuple(blocks),
+    )

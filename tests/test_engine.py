@@ -83,7 +83,16 @@ def test_engine_runs_new_trace_scenarios(scenario):
 
 
 def test_all_scenarios_registered():
-    assert list_scenarios() == ["alibaba", "bursty", "pareto_diurnal"]
+    assert list_scenarios() == [
+        "alibaba",
+        "bursty",
+        "cluster_v2017",
+        "pareto_diurnal",
+    ]
+    # cluster_v2017 needs its CSV on disk; synthetic scenarios always work
+    from repro.traces import available_scenarios
+
+    assert {"alibaba", "bursty", "pareto_diurnal"} <= set(available_scenarios())
 
 
 # ---- ordering invariants ----------------------------------------------------

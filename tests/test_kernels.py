@@ -167,6 +167,28 @@ def test_waterlevel_kernel_bit_identical_to_jnp():
             assert (np.asarray(a_j) == np.asarray(a_p)).all()
 
 
+def test_waterlevel_batched_grid_bit_identical_to_vmap():
+    """The batched-grid kernel behind ``water_fill_batch`` must match
+    the vmapped jnp path bit-for-bit — allocs, levels, and Φ — across B
+    and the lane-padding boundaries (deterministic twin of the
+    hypothesis coverage in test_waterlevel_parity.py)."""
+    from repro.core import wf_jax
+
+    rng = np.random.default_rng(1)
+    for b, k, m in ((1, 1, 3), (4, 3, 17), (7, 2, 128), (3, 4, 129)):
+        busy = jnp.asarray(rng.integers(0, 30, (b, m)), jnp.int32)
+        mu = jnp.asarray(rng.integers(1, 6, (b, m)), jnp.int32)
+        gm = rng.random((b, k, m)) < 0.4
+        gm[:, :, 0] = True  # no empty availability sets
+        demands = jnp.asarray(rng.integers(0, 80, (b, k)), jnp.int32)
+        args = (busy, mu, jnp.asarray(gm), demands)
+        a_j, l_j, p_j = wf_jax.water_fill_batch(*args, use_pallas=False)
+        a_p, l_p, p_p = wf_jax.water_fill_batch(*args, use_pallas=True)
+        assert (np.asarray(a_j) == np.asarray(a_p)).all()
+        assert (np.asarray(l_j) == np.asarray(l_p)).all()
+        assert (np.asarray(p_j) == np.asarray(p_p)).all()
+
+
 def test_waterlevel_kernel_resolution_rules():
     """Auto-dispatch: jnp on CPU, Pallas on TPU, capped at PALLAS_MAX_M;
     explicit choices win below the cap."""

@@ -1,0 +1,443 @@
+"""Placement subsystem: store semantics, replication policies, engine
+integration, checkpoint-derived routing.
+
+The load-bearing guarantee here: with a static ``PlacementStore``
+backend the engine's realized schedules are bit-identical to the
+frozen-tuple traces it replaces (bursty + pareto_diurnal, the
+acceptance scenarios).  Property-based invariant coverage (random op
+streams, no-op rebalance stability) lives in
+``test_placement_properties.py`` (needs hypothesis).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import TaskGroup
+from repro.placement import (
+    HotBlockPolicy,
+    PlacedJob,
+    PlacementEvent,
+    PlacementStore,
+    churn_timeline,
+    data_block,
+    list_replication_policies,
+    make_replication_policy,
+)
+from repro.runtime import SchedulingEngine, make_policy
+from repro.traces import generate
+
+# ---- store semantics --------------------------------------------------------
+
+
+def test_store_basic_lifecycle():
+    store = PlacementStore(8)
+    assert store.add_block("data/j0/g0", (3, 1, 3)) == (1, 3)
+    assert "data/j0/g0" in store
+    assert store.replicas("data/j0/g0") == (1, 3)
+    v = store.version
+    assert store.add_replica("data/j0/g0", 5)
+    assert not store.add_replica("data/j0/g0", 5)  # already there
+    assert store.replicas("data/j0/g0") == (1, 3, 5)
+    assert store.evict("data/j0/g0", 1)
+    assert not store.evict("data/j0/g0", 1)  # already gone
+    assert store.version == v + 2
+    assert store.replicas_added == 1 and store.replicas_evicted == 1
+
+
+def test_store_rejects_bad_inputs():
+    store = PlacementStore(4)
+    with pytest.raises(ValueError):
+        store.add_block("b", ())
+    with pytest.raises(ValueError):
+        store.add_block("b", (4,))  # out of range
+    store.add_block("b", (0,))
+    with pytest.raises(ValueError):
+        store.add_block("b", (1,))  # duplicate
+    with pytest.raises(KeyError):
+        store.replicas("nope")
+    with pytest.raises(KeyError):
+        store.add_replica("nope", 0)
+    store.server_leave(2)
+    with pytest.raises(ValueError):
+        store.add_replica("b", 2)  # inactive server
+    store.server_join(2)
+    assert store.add_replica("b", 2)
+
+
+def test_server_leave_evicts_and_join_reactivates():
+    store = PlacementStore(4)
+    store.add_block("a", (0, 1))
+    store.add_block("b", (1, 2))
+    affected = store.server_leave(1)
+    assert affected == ["a", "b"]
+    assert store.replicas("a") == (0,)
+    assert store.replicas("b") == (2,)
+    assert store.active_servers() == (0, 2, 3)
+
+
+def test_eligible_is_intersection_and_raises_when_empty():
+    store = PlacementStore(6)
+    store.add_block("model/m", (0, 1, 2))
+    store.add_block("lora/a", (1, 2, 4))
+    assert store.eligible("model/m", "lora/a") == (1, 2)
+    store.add_block("lora/b", (5,))
+    with pytest.raises(ValueError, match="no server holds all"):
+        store.eligible("model/m", "lora/b")
+    with pytest.raises(KeyError):
+        store.eligible("model/m", "lora/zzz")
+
+
+def test_evicting_last_replica_means_data_loss():
+    store = PlacementStore(3)
+    store.add_block("a", (2,))
+    assert store.evict("a", 2)
+    assert store.replicas("a") == ()
+
+
+# ---- replication policies ---------------------------------------------------
+
+
+def test_policy_registry():
+    assert {"static", "hot-block", "checkpoint"} <= set(
+        list_replication_policies()
+    )
+    with pytest.raises(KeyError):
+        make_replication_policy("nope")
+    with pytest.raises(TypeError):
+        make_replication_policy(42)
+
+
+def test_hot_block_policy_repairs_and_tops_up_hot_blocks():
+    policy = HotBlockPolicy(max_replicas=3, min_replicas=2, add_budget=2)
+    store = PlacementStore(6, policy=policy)
+    store.add_block("cold", (0, 1))
+    store.add_block("hot", (2, 3))
+    store.add_block("wounded", (0, 1))
+    store.evict("wounded", 1)  # below min_replicas -> repair candidate
+    store.record_access("hot", 100)
+    delta = store.propose()
+    blocks_added = [b for b, _ in delta.added]
+    assert "wounded" in blocks_added  # repair pass
+    assert "hot" in blocks_added  # hot pass
+    assert "cold" not in blocks_added  # zero access, healthy
+    store.apply(delta)
+    assert len(store.replicas("wounded")) == 2
+    assert len(store.replicas("hot")) == 3
+    # replica cap respected on subsequent rebalances
+    store.record_access("hot", 100)
+    for b, _ in store.rebalance().added:
+        assert b != "hot" or len(store.replicas("hot")) <= 3
+
+
+def test_static_rebalance_is_noop():
+    store = PlacementStore(4)
+    store.add_block("a", (0, 1))
+    before = (store.snapshot(), store.version)
+    delta = store.rebalance(np.random.default_rng(7))
+    assert not delta
+    assert (store.snapshot(), store.version) == before
+
+
+# ---- engine equivalence (acceptance criterion) ------------------------------
+
+
+@pytest.mark.parametrize("scenario", ["bursty", "pareto_diurnal"])
+@pytest.mark.parametrize("assign", ["wf", "wf_jax"])
+def test_static_backend_reproduces_frozen_schedules(scenario, assign):
+    """The tentpole contract: a static PlacementStore backend must leave
+    the engine's realized schedule bit-identical to the frozen-tuple
+    trace — same per-job JCTs, same makespan, same mean."""
+    kw = dict(n_jobs=24, total_tasks=3_000, n_servers=20, seed=7)
+    frozen = generate(scenario, **kw)
+    store = PlacementStore(20)
+    placed = generate(scenario, store=store, **kw)
+    for a, b in zip(frozen, placed):
+        assert isinstance(b, PlacedJob)
+        assert [(g.size, g.servers) for g in a.groups] == [
+            (g.size, g.servers) for g in b.groups
+        ]
+    base = SchedulingEngine(20, make_policy(assign)).run(frozen)
+    via_store = SchedulingEngine(
+        20, make_policy(assign), placement=store, debug=True
+    ).run(placed)
+    assert base.jct == via_store.jct
+    assert base.makespan == via_store.makespan
+    assert base.mean_jct == via_store.mean_jct
+
+
+@pytest.mark.parametrize("ordering", ["fifo", "ocwf-acc"])
+def test_static_backend_reproduces_frozen_schedules_reordered(ordering):
+    kw = dict(n_jobs=20, total_tasks=2_500, n_servers=20, seed=11)
+    frozen = generate("bursty", **kw)
+    store = PlacementStore(20)
+    placed = generate("bursty", store=store, **kw)
+    base = SchedulingEngine(20, make_policy("wf", ordering)).run(frozen)
+    via_store = SchedulingEngine(
+        20, make_policy("wf", ordering), placement=store, debug=True
+    ).run(placed)
+    assert base.jct == via_store.jct
+
+
+# ---- engine placement events ------------------------------------------------
+
+
+def _one_block_job(store, job_id, size, servers, m=4):
+    block = data_block(job_id, 0)
+    store.add_block(block, servers)
+    return PlacedJob(
+        job_id, 0, (TaskGroup(size, servers),), np.full(m, 2), (block,)
+    )
+
+
+def test_evicted_replica_strands_queued_fragments_like_a_fault():
+    store = PlacementStore(4)
+    job = _one_block_job(store, 0, 40, (0, 1))
+    events = (PlacementEvent(1, "evict", block=data_block(0, 0), server=0),)
+    res = SchedulingEngine(
+        4, make_policy("wf"), placement=store, events=events, debug=True,
+        on_slot=lambda c, s: c.assert_invariant(),
+    ).run([job])
+    assert res.jct.get(0) is not None
+    assert res.reassignments > 0
+    assert not res.failed_jobs
+
+
+def test_last_replica_eviction_fails_job():
+    store = PlacementStore(4)
+    job = _one_block_job(store, 0, 40, (2,))
+    events = (PlacementEvent(1, "evict", block=data_block(0, 0), server=2),)
+    res = SchedulingEngine(
+        4, make_policy("wf"), placement=store, events=events, debug=True
+    ).run([job])
+    assert res.failed_jobs == [0]
+    assert 0 not in res.jct
+
+
+def test_pre_arrival_eviction_changes_resolution():
+    """Placement churn between generation and arrival must change the
+    arriving job's eligible set (arrival-time resolution)."""
+    store = PlacementStore(4)
+    block = data_block(0, 0)
+    store.add_block(block, (0, 1))
+    job = PlacedJob(0, 5, (TaskGroup(10, (0, 1)),), np.full(4, 2), (block,))
+    seen = {}
+
+    def snoop(cluster, slot):
+        if slot == 5 and 0 in cluster.remaining:
+            seen["servers"] = cluster.jobs[0].groups[0].servers
+
+    events = (PlacementEvent(1, "evict", block=block, server=0),)
+    res = SchedulingEngine(
+        4, make_policy("wf"), placement=store, events=events, on_slot=snoop
+    ).run([job])
+    assert seen["servers"] == (1,)
+    assert res.jct.get(0) is not None
+
+
+def test_pre_arrival_total_loss_fails_job_at_arrival():
+    store = PlacementStore(4)
+    block = data_block(0, 0)
+    store.add_block(block, (3,))
+    job = PlacedJob(0, 5, (TaskGroup(10, (3,)),), np.full(4, 2), (block,))
+    events = (PlacementEvent(1, "evict", block=block, server=3),)
+    res = SchedulingEngine(
+        4, make_policy("wf"), placement=store, events=events
+    ).run([job])
+    assert res.failed_jobs == [0]
+
+
+def test_replica_add_widens_and_rebalances_under_reordering():
+    store = PlacementStore(4)
+    job = _one_block_job(store, 0, 40, (0,))
+    events = (PlacementEvent(1, "add", block=data_block(0, 0), server=3),)
+    narrow = SchedulingEngine(
+        4, make_policy("wf", "ocwf-acc"), placement=store, debug=True
+    ).run([_one_block_job(PlacementStore(4), 0, 40, (0,))])
+    widened = SchedulingEngine(
+        4, make_policy("wf", "ocwf-acc"), placement=store, events=events,
+        debug=True, on_slot=lambda c, s: c.assert_invariant(),
+    ).run([job])
+    assert widened.jct[0] < narrow.jct[0]
+
+
+def test_server_leave_evicts_all_its_replicas():
+    store = PlacementStore(4)
+    job = _one_block_job(store, 0, 40, (0, 1))
+    events = (PlacementEvent(1, "leave", server=0),)
+    res = SchedulingEngine(
+        4, make_policy("wf"), placement=store, events=events, debug=True,
+        on_slot=lambda c, s: c.assert_invariant(),
+    ).run([job])
+    assert res.jct.get(0) is not None
+    assert store.replicas(data_block(0, 0)) == (1,)
+    assert store.active_servers() == (1, 2, 3)
+
+
+def test_placement_events_require_store():
+    with pytest.raises(ValueError, match="placement events require"):
+        SchedulingEngine(
+            4, "wf", events=(PlacementEvent(1, "join", server=0),)
+        )
+
+
+def test_placement_event_validation():
+    with pytest.raises(ValueError):
+        PlacementEvent(0, "explode")
+    with pytest.raises(ValueError):
+        PlacementEvent(0, "evict", block="b")  # missing server
+    with pytest.raises(ValueError):
+        PlacementEvent(0, "leave")  # missing server
+
+
+@pytest.mark.parametrize("repl_policy", ["static", "hot-block"])
+def test_churned_bursty_run_preserves_invariants(repl_policy):
+    """End-to-end churn: every job completes or is explicitly failed and
+    the queue/busy invariants hold every slot."""
+    store = PlacementStore(20, policy=repl_policy)
+    jobs = generate(
+        "bursty", store=store, n_jobs=24, total_tasks=3_000, n_servers=20,
+        seed=7, avail_lo=2, avail_hi=4,
+    )
+    horizon = max(j.arrival for j in jobs) + 300
+    events = churn_timeline(
+        store, horizon=horizon, rebalance_every=4, evict_rate=0.3, seed=3
+    )
+    res = SchedulingEngine(
+        20, make_policy("wf"), placement=store, events=events, debug=True,
+        on_slot=lambda c, s: c.assert_invariant(),
+    ).run(jobs)
+    assert set(res.jct).isdisjoint(res.failed_jobs)
+    assert set(res.jct) | set(res.failed_jobs) == {j.job_id for j in jobs}
+
+
+def test_churn_timeline_cadence_does_not_change_evictions():
+    """Sweeping the rebalance cadence must keep the eviction stream
+    fixed (independent child rngs) so sweep cells stay comparable."""
+    store = PlacementStore(8)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        store.place_block(f"b{i}", rng, zipf_alpha=1.0, avail_lo=2, avail_hi=4)
+    evictions = lambda evs: [
+        (e.slot, e.block, e.server) for e in evs if e.kind == "evict"
+    ]
+    a = churn_timeline(store, horizon=50, rebalance_every=0, evict_rate=0.3, seed=1)
+    b = churn_timeline(store, horizon=50, rebalance_every=5, evict_rate=0.3, seed=1)
+    assert evictions(a) == evictions(b)
+
+
+# ---- checkpoint-derived serve routing ---------------------------------------
+
+
+def _save_tiny_checkpoint(directory, step=3):
+    from repro.checkpoint.store import save_checkpoint
+
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.zeros(3, dtype=np.float32)}
+    return save_checkpoint(str(directory), step, tree)
+
+
+def test_register_checkpoint_validates_manifest_and_places(tmp_path):
+    from repro.placement import register_checkpoint
+
+    ckpt_dir = tmp_path / "qwen-smoke"
+    _save_tiny_checkpoint(ckpt_dir)
+    store = PlacementStore(4)
+    info = register_checkpoint(store, str(ckpt_dir), servers=(0, 2))
+    assert info.block == "model/qwen-smoke"
+    assert info.step == 3 and info.n_leaves == 2 and info.n_params == 9
+    assert store.replicas("model/qwen-smoke") == (0, 2)
+    with pytest.raises(FileNotFoundError):
+        register_checkpoint(store, str(tmp_path / "missing"), servers=(0,))
+
+
+def test_register_checkpoint_rejects_malformed_manifest(tmp_path):
+    import json
+
+    from repro.placement import register_checkpoint
+
+    ckpt_dir = tmp_path / "broken"
+    _save_tiny_checkpoint(ckpt_dir)
+    manifest_path = ckpt_dir / "step_00000003" / "manifest.json"
+    manifest = json.loads(manifest_path.read_text())
+    del manifest["leaves"][0]["crc32"]
+    manifest_path.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="crc32"):
+        register_checkpoint(PlacementStore(4), str(ckpt_dir), servers=(0,))
+
+
+def test_router_resolves_eligible_from_checkpoint_manifest(tmp_path):
+    """The serve-layer acceptance path: no caller-passed eligible — the
+    router derives it from checkpoint placement by model/adapter ID."""
+    from repro.placement import register_checkpoint
+    from repro.serve.engine import ReplicaRouter
+
+    store = PlacementStore(4)
+    register_checkpoint(
+        store, str(_ckpt(tmp_path, "qwen")), servers=(0, 1, 3)
+    )
+    register_checkpoint(
+        store, str(_ckpt(tmp_path, "sql-lora")), servers=(1, 2, 3), kind="lora"
+    )
+    router = ReplicaRouter(4, tokens_per_step=100, placement=store)
+    out = router.route(150, model="qwen", adapter="sql-lora")
+    assert set(out) <= {1, 3}  # the intersection
+    assert sum(out.values()) == 150
+    assert store.access_count("model/qwen") == 150
+    # model-only routing uses the model's full replica set
+    out = router.route(90, model="qwen")
+    assert set(out) <= {0, 1, 3}
+    # unsatisfiable pairing surfaces as an error, not a silent fallback
+    register_checkpoint(store, str(_ckpt(tmp_path, "solo")), servers=(0,))
+    with pytest.raises(ValueError, match="no server holds all"):
+        router.route(10, model="solo", adapter="sql-lora")
+
+
+def _ckpt(tmp_path, name):
+    directory = tmp_path / name
+    _save_tiny_checkpoint(directory)
+    return directory
+
+
+def test_checkpoint_policy_restores_target_replication(tmp_path):
+    from repro.placement import register_checkpoint
+
+    store = PlacementStore(4, policy="checkpoint")
+    register_checkpoint(store, str(_ckpt(tmp_path, "qwen")), servers=(0, 1))
+    store.add_block("data/j0/g0", (0,))  # data blocks are not the policy's job
+    store.evict("model/qwen", 0)
+    delta = store.rebalance()
+    assert [b for b, _ in delta.added] == ["model/qwen"]
+    assert len(store.replicas("model/qwen")) == 2
+    assert store.replicas("data/j0/g0") == (0,)
+
+
+def test_router_by_id_without_store_raises():
+    from repro.serve.engine import ReplicaRouter
+
+    router = ReplicaRouter(4, tokens_per_step=100)
+    with pytest.raises(ValueError, match="needs a placement store"):
+        router.route(10, model="qwen")
+
+
+def test_scan_checkpoints_summarizes_root(tmp_path):
+    from repro.placement import scan_checkpoints
+
+    _ckpt(tmp_path, "a")
+    _ckpt(tmp_path, "b")
+    (tmp_path / "not-a-ckpt").mkdir()
+    infos = scan_checkpoints(str(tmp_path))
+    assert [i.block for i in infos] == ["model/a", "model/b"]
+
+
+# ---- benchmark scenario (smoke) ---------------------------------------------
+
+
+@pytest.mark.slow
+def test_placement_churn_benchmark_runs_all_policies():
+    from benchmarks.policy_matrix import run_placement_churn
+
+    rows = run_placement_churn(
+        smoke=True, cadences=(0, 8), out_csv="placement_churn_test.csv"
+    )
+    assert {r["repl_policy"] for r in rows} == set(list_replication_policies())
+    assert all(r["makespan"] > 0 for r in rows)

@@ -1,0 +1,126 @@
+"""Property-based placement invariants (hypothesis).
+
+The satellite contract: after *any* mix of placement operations, every
+resolved eligible set is within ``[0, M)``, sorted, and non-empty unless
+every holder was explicitly evicted (data loss is a first-class
+outcome); resolutions are stable under no-op rebalances.  Deterministic
+twins that don't need hypothesis live in ``test_placement.py``.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import TaskGroup
+from repro.placement import PlacedJob, PlacementStore
+
+
+@given(
+    seed=st.integers(0, 100_000),
+    m=st.integers(2, 24),
+    n_blocks=st.integers(1, 12),
+    n_ops=st.integers(0, 30),
+)
+@settings(max_examples=60, deadline=None)
+def test_resolved_sets_valid_under_random_op_streams(seed, m, n_blocks, n_ops):
+    """After any mix of placement ops, every block resolves to a sorted
+    replica set within [0, M) — non-empty unless its holders were all
+    explicitly evicted/left, in which case it is exactly ()."""
+    rng = np.random.default_rng(seed)
+    store = PlacementStore(m, policy="hot-block")
+    for i in range(n_blocks):
+        store.place_block(
+            f"data/j0/g{i}", rng, zipf_alpha=1.0, avail_lo=1,
+            avail_hi=min(4, m),
+        )
+    for _ in range(n_ops):
+        op = rng.integers(5)
+        block = f"data/j0/g{int(rng.integers(n_blocks))}"
+        server = int(rng.integers(m))
+        if op == 0:
+            if server in store.active_servers():
+                store.add_replica(block, server)
+        elif op == 1:
+            store.evict(block, server)
+        elif op == 2:
+            store.server_leave(server)
+        elif op == 3:
+            store.server_join(server)
+        else:
+            store.record_access(block, int(rng.integers(1, 50)))
+            store.rebalance(rng)
+    active = set(store.active_servers())
+    for block in store.blocks():
+        reps = store.replicas(block)
+        assert reps == tuple(sorted(set(reps)))
+        assert all(0 <= r < m for r in reps)
+        assert set(reps) <= active | set(reps)  # no out-of-universe servers
+    # snapshot round-trips through resolution
+    assert {b: store.replicas(b) for b in store.blocks()} == store.snapshot()
+
+
+@given(seed=st.integers(0, 100_000), m=st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_noop_rebalance_is_stable(seed, m):
+    """Static-policy rebalances never change any resolution, no matter
+    how often they run; version stays put (no-op = no mutation)."""
+    rng = np.random.default_rng(seed)
+    store = PlacementStore(m)  # static
+    for i in range(int(rng.integers(1, 8))):
+        store.place_block(
+            f"data/j0/g{i}", rng, zipf_alpha=1.0, avail_lo=1,
+            avail_hi=min(4, m),
+        )
+        store.record_access(f"data/j0/g{i}", int(rng.integers(100)))
+    before = (store.snapshot(), store.version)
+    for _ in range(3):
+        assert not store.rebalance(rng)
+    assert (store.snapshot(), store.version) == before
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=30, deadline=None)
+def test_placed_job_resolution_tracks_store(seed):
+    """PlacedJob.resolve mirrors the live store: evictions narrow the
+    eligible set; losing the last replica resolves to None (failure)."""
+    rng = np.random.default_rng(seed)
+    m = 10
+    store = PlacementStore(m)
+    servers = store.place_block(
+        "data/j5/g0", rng, zipf_alpha=1.0, avail_lo=2, avail_hi=4
+    )
+    job = PlacedJob(
+        5, 0, (TaskGroup(7, servers),), np.full(m, 2), ("data/j5/g0",)
+    )
+    assert job.resolve(store).groups[0].servers == servers
+    victim = servers[int(rng.integers(len(servers)))]
+    store.evict("data/j5/g0", victim)
+    resolved = job.resolve(store)
+    if len(servers) == 1:
+        assert resolved is None  # data lost
+    else:
+        assert resolved.groups[0].servers == tuple(
+            s for s in servers if s != victim
+        )
+
+
+@given(
+    seed=st.integers(0, 100_000),
+    n_jobs=st.integers(2, 40),
+    mult=st.integers(1, 50),
+)
+@settings(max_examples=80, deadline=None)
+def test_lognormal_sizes_invariant(seed, n_jobs, mult):
+    """Satellite contract for traces: heavy-tailed sizes always sum to
+    total_tasks with every job ≥ 1 — including the pathological-drift
+    branch that used to silently re-clamp."""
+    from repro.traces.placement import lognormal_sizes
+
+    rng = np.random.default_rng(seed)
+    total = n_jobs * mult + int(rng.integers(0, 7))
+    sizes = lognormal_sizes(n_jobs, total, rng, sigma=4.0)  # extreme skew
+    assert int(sizes.sum()) == total
+    assert sizes.min() >= 1

@@ -1,0 +1,177 @@
+"""Trace-layer semantics: size normalization invariants and the
+cluster-trace-v2017 CSV loader (schema validation + fixture replay)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.runtime import SchedulingEngine
+from repro.traces import (
+    ClusterTraceConfig,
+    generate,
+    generate_cluster_trace,
+    load_batch_task_csv,
+    scenario_available,
+)
+from repro.traces.cluster_v2017 import ENV_VAR
+from repro.traces.placement import lognormal_sizes, normalize_sizes
+
+FIXTURE_CSV = os.path.join(os.path.dirname(__file__), "data", "batch_task_sample.csv")
+
+
+# ---- size normalization (lognormal fix) -------------------------------------
+
+
+def test_normalize_sizes_common_path_unchanged():
+    """The non-pathological path must match the historical behavior
+    exactly (seeded traces stay bit-identical)."""
+    rng = np.random.default_rng(0)
+    raw = rng.lognormal(0.0, 1.6, 40)
+    sizes = np.maximum(1, np.round(raw / raw.sum() * 5_000)).astype(int)
+    sizes[np.argmax(sizes)] += 5_000 - int(sizes.sum())
+    assert sizes.min() >= 1, "fixture must exercise the common path"
+    assert (normalize_sizes(raw, 5_000) == sizes).all()
+
+
+def test_normalize_sizes_pathological_drift_redistributes():
+    """The old re-clamp broke sum == total; the fix shaves the excess
+    off the largest jobs instead."""
+    raw = np.array([1.0, 1.0, 1e-12])
+    sizes = normalize_sizes(raw, 3)
+    assert int(sizes.sum()) == 3
+    assert sizes.min() >= 1
+    # an extremely skewed draw: one giant, many below-rounding jobs
+    raw = np.array([1e9] + [1e-9] * 9)
+    sizes = normalize_sizes(raw, 12)
+    assert int(sizes.sum()) == 12
+    assert sizes.min() >= 1
+
+
+def test_normalize_sizes_rejects_infeasible_split():
+    with pytest.raises(ValueError, match="cannot split"):
+        normalize_sizes(np.ones(10), 9)
+
+
+def test_lognormal_sizes_invariant_deterministic_sweep():
+    """Deterministic twin of the hypothesis property: the Σ == total and
+    ≥1 invariants hold across seeds and extreme skew."""
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        n, total = 20, 20 + seed
+        sizes = lognormal_sizes(n, total, rng, sigma=4.5)
+        assert int(sizes.sum()) == total
+        assert sizes.min() >= 1
+
+
+# ---- cluster-trace-v2017 CSV loader -----------------------------------------
+
+
+def test_fixture_csv_loads_and_validates():
+    rows = load_batch_task_csv(FIXTURE_CSV)
+    # Failed/Waiting statuses and the 0-instance row are skipped
+    assert len(rows) == 11
+    assert all(r.status == "Terminated" for r in rows)
+    assert all(r.instance_num > 0 for r in rows)
+
+
+def test_loader_missing_file_raises_with_hint():
+    with pytest.raises(FileNotFoundError, match=ENV_VAR):
+        load_batch_task_csv("/nonexistent/batch_task.csv")
+
+
+def test_loader_rejects_malformed_rows(tmp_path):
+    bad_cols = tmp_path / "cols.csv"
+    bad_cols.write_text("1,2,j,t,5,Terminated,1\n")  # 7 columns
+    with pytest.raises(ValueError, match="expected 8 columns"):
+        load_batch_task_csv(str(bad_cols))
+    bad_int = tmp_path / "int.csv"
+    bad_int.write_text("abc,2,j,t,5,Terminated,1,1\n")
+    with pytest.raises(ValueError, match="create_timestamp"):
+        load_batch_task_csv(str(bad_int))
+    bad_job = tmp_path / "job.csv"
+    bad_job.write_text("1,2,,t,5,Terminated,1,1\n")
+    with pytest.raises(ValueError, match="empty job_id"):
+        load_batch_task_csv(str(bad_job))
+
+
+def test_loader_tolerates_header_and_blank_lines(tmp_path):
+    csv_path = tmp_path / "with_header.csv"
+    csv_path.write_text(
+        "create_timestamp,modify_timestamp,job_id,task_id,instance_num,"
+        "status,plan_cpu,plan_mem\n"
+        "\n"
+        "10,20,j1,t1,4,Terminated,100,0.5\n"
+    )
+    rows = load_batch_task_csv(str(csv_path))
+    assert len(rows) == 1 and rows[0].instance_num == 4
+
+
+def test_generate_cluster_trace_from_fixture_runs_end_to_end():
+    cfg = ClusterTraceConfig(
+        path=FIXTURE_CSV, n_servers=12, seconds_per_slot=30.0
+    )
+    jobs = generate_cluster_trace(cfg)
+    # 5 jobs survive filtering (j_1003 is all-Failed)
+    assert len(jobs) == 5
+    assert [j.job_id for j in jobs] == list(range(5))
+    assert jobs[0].arrival == 0  # earliest job anchors slot 0
+    assert all(a.arrival <= b.arrival for a, b in zip(jobs, jobs[1:]))
+    # each CSV row with work is one task group
+    assert [len(j.groups) for j in jobs] == [3, 2, 2, 3, 1]
+    assert sum(j.n_tasks for j in jobs) == 880
+    res = SchedulingEngine(12, "wf").run(jobs)
+    assert sorted(res.jct) == list(range(5))
+
+
+def test_generate_cluster_trace_placement_backed():
+    from repro.placement import PlacedJob, PlacementStore
+
+    cfg_kw = dict(path=FIXTURE_CSV, n_servers=12, seconds_per_slot=30.0)
+    frozen = generate_cluster_trace(ClusterTraceConfig(**cfg_kw))
+    store = PlacementStore(12)
+    placed = generate_cluster_trace(ClusterTraceConfig(**cfg_kw), store=store)
+    for a, b in zip(frozen, placed):
+        assert isinstance(b, PlacedJob)
+        assert [(g.size, g.servers) for g in a.groups] == [
+            (g.size, g.servers) for g in b.groups
+        ]
+        assert store.replicas(b.blocks[0]) == b.groups[0].servers
+
+
+def test_policy_matrix_filters_config_knobs_per_scenario(monkeypatch):
+    """With the CSV configured, cluster_v2017 joins the matrix default
+    sweep; knobs a scenario's config lacks (total_tasks) are dropped
+    instead of crashing the run."""
+    from benchmarks.policy_matrix import run_matrix
+
+    monkeypatch.setenv(ENV_VAR, FIXTURE_CSV)
+    rows = run_matrix(
+        scenarios=("bursty", "cluster_v2017"),
+        orderings=("fifo",),
+        assigners=("wf",),
+        trace_kw=dict(n_jobs=8, total_tasks=1_000, n_servers=10, seed=0),
+    )
+    assert [r["scenario"] for r in rows] == ["bursty", "cluster_v2017"]
+    assert all(r["makespan"] > 0 for r in rows)
+
+
+def test_build_job_rejects_missing_group_spec():
+    from repro.traces.placement import build_job
+
+    with pytest.raises(ValueError, match="mean_groups > 0"):
+        build_job(
+            0, 0, 10, n_servers=4, zipf_alpha=1.0, avail_lo=1, avail_hi=2,
+            cap_lo=1, cap_hi=2, rng=np.random.default_rng(0),
+        )
+
+
+def test_scenario_registry_gracefully_skips_missing_csv(monkeypatch):
+    monkeypatch.delenv(ENV_VAR, raising=False)
+    assert not scenario_available("cluster_v2017")
+    with pytest.raises(FileNotFoundError, match="no cluster-trace-v2017"):
+        generate("cluster_v2017")
+    monkeypatch.setenv(ENV_VAR, FIXTURE_CSV)
+    assert scenario_available("cluster_v2017")
+    jobs = generate("cluster_v2017", n_servers=10, seconds_per_slot=30.0)
+    assert len(jobs) == 5

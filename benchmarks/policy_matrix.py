@@ -58,12 +58,20 @@ DEFAULT_ORDERINGS = ("fifo", "ocwf-acc", "setf")
 
 WATERLEVEL_MS = (64, 512, 4096, 16384)
 
+RD_SWEEP_MS = (64, 512, 4096, 16384)
+RD_SWEEP_BURSTS = (1, 8, 64)
+
 # re-replication cadence sweep: rebalance every N slots (0 = never)
 CHURN_CADENCES = (0, 16, 4)
 CHURN_EVICT_RATE = 0.3  # per-slot replica-eviction probability
+# reordering policies swept at this representative cadence (the full
+# cadence grid stays FIFO: reorder rescans already dominate those cells)
+CHURN_ORDERINGS = ("ocwf", "ocwf-acc", "setf")
+CHURN_REORDER_CADENCE = 16
 
 CHURN_FIELDS = [
     "repl_policy",
+    "ordering",
     "rebalance_every",
     "evict_rate",
     "mean_jct",
@@ -218,14 +226,203 @@ def run_waterlevel_sweep(
     return payload
 
 
+def _rd_instance(rng, m, n_tasks, k_groups=8, avail=(8, 12)):
+    """One synthetic RD arrival at cluster width ``m`` (paper-shaped
+    availability: each group picks `avail` servers Zipf-free uniform)."""
+    import numpy as np
+
+    from repro.core import AssignmentProblem, TaskGroup
+    from repro.traces.placement import normalize_sizes
+
+    lo = min(avail[0], m)
+    hi = min(avail[1], m)
+    # normalize_sizes keeps Σ sizes == n_tasks exactly (a bare clamp of a
+    # multinomial draw would silently grow the workload past the recorded
+    # n_tasks metadata)
+    sizes = normalize_sizes(rng.random(k_groups) + 0.1, n_tasks)
+    groups = tuple(
+        TaskGroup(
+            int(s),
+            tuple(
+                sorted(
+                    rng.choice(
+                        m, size=int(rng.integers(lo, hi + 1)), replace=False
+                    ).tolist()
+                )
+            ),
+        )
+        for s in sizes
+    )
+    return AssignmentProblem(
+        busy=rng.integers(0, 40, m), mu=rng.integers(3, 6, m), groups=groups
+    )
+
+
+def run_rd_sweep(
+    ms: tuple[int, ...] = RD_SWEEP_MS,
+    bursts: tuple[int, ...] = RD_SWEEP_BURSTS,
+    *,
+    n_tasks: int = 192,
+    iters: int = 3,
+    seed: int = 0,
+    out_json: str = "BENCH_rd.json",
+) -> dict:
+    """Per-arrival RD overhead sweep: host vs jnp vs Pallas across M,
+    plus burst-admission cost across burst sizes.
+
+    Each M cell times one RD assignment (the unit of work inside the
+    ``rd``/``rd_plus`` policies) through each backend and asserts the
+    assignments stay identical; the burst section times
+    ``replica_deletion_batch`` — the engine's same-slot admission path —
+    per job, host commit walk vs one chained device dispatch.  The
+    payload lands in ``results/<out_json>`` (uploaded by nightly CI) so
+    the host/device trajectory is tracked like the water-level sweep.
+
+    On CPU the device backends are expected to *lose* (the jnp while
+    loop pays per-strip XLA dispatch, and Pallas only runs in interpret
+    mode — its cells use a reduced instance, recorded per-cell as
+    ``n_tasks``); auto-dispatch therefore stays on host off-TPU, and the
+    device columns exist to track the TPU trajectory.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import AssignmentProblem
+    from repro.core.rd import replica_deletion, replica_deletion_batch
+    from repro.core.rd_jax import replica_deletion_jax
+
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(seed)
+
+    def timed(fn, warmup=True):
+        if warmup:
+            out = fn()
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn()
+            times.append(time.perf_counter() - t0)
+        return out, float(np.median(times) * 1e6)
+
+    m_rows: list[dict] = []
+    for m in ms:
+        prob = _rd_instance(rng, m, n_tasks)
+        host, host_us = timed(lambda: replica_deletion(prob), warmup=False)
+        dev, jnp_us = timed(
+            lambda: replica_deletion_jax(prob, backend="jnp")
+        )
+        if dev.alloc != host.alloc:
+            raise AssertionError(f"rd sweep: jnp != host at M={m}")
+        row = {
+            "m": m,
+            "n_tasks": n_tasks,
+            "host_us": round(host_us, 1),
+            "jnp_us": round(jnp_us, 1),
+            "jnp_over_host": round(jnp_us / max(host_us, 1e-9), 3),
+        }
+        if on_tpu:
+            pal, pallas_us = timed(
+                lambda: replica_deletion_jax(prob, backend="pallas")
+            )
+            if pal.alloc != host.alloc:
+                raise AssertionError(f"rd sweep: pallas != host at M={m}")
+            row["pallas_us"] = round(pallas_us, 1)
+        m_rows.append(row)
+        emit(f"rd/m{m}/host", host_us, 0.0)
+        emit(f"rd/m{m}/jnp", jnp_us, jnp_us / max(host_us, 1e-9))
+
+    # Pallas on CPU runs the strip kernel interpreted (pure-Python per
+    # stage), so parity + latency are tracked on one reduced instance
+    # instead of the full curve — the full column appears on real TPU.
+    pallas_rows: list[dict] = []
+    if not on_tpu:
+        tiny_tasks = 24
+        prob = _rd_instance(rng, ms[0], tiny_tasks, k_groups=3)
+        host = replica_deletion(prob)
+        pal, pallas_us = timed(
+            lambda: replica_deletion_jax(prob, backend="pallas")
+        )
+        if pal.alloc != host.alloc:
+            raise AssertionError("rd sweep: pallas(interpret) != host")
+        pallas_rows.append(
+            {
+                "m": ms[0],
+                "n_tasks": tiny_tasks,
+                "interpret": True,
+                "pallas_us": round(pallas_us, 1),
+            }
+        )
+        emit(f"rd/m{ms[0]}/pallas-interpret", pallas_us, 0.0)
+
+    burst_rows: list[dict] = []
+    m_burst = ms[0]
+    tasks_per_job = 16
+    for nb in bursts:
+        base = _rd_instance(rng, m_burst, tasks_per_job)
+        probs = [base] + [
+            AssignmentProblem(
+                busy=base.busy,
+                mu=p.mu,
+                groups=p.groups,
+            )
+            for p in (
+                _rd_instance(rng, m_burst, tasks_per_job) for _ in range(nb - 1)
+            )
+        ]
+        saved_backend = os.environ.get("REPRO_RD_BACKEND")
+        try:
+            os.environ["REPRO_RD_BACKEND"] = "host"
+            walk, walk_us = timed(
+                lambda: replica_deletion_batch(probs), warmup=False
+            )
+            os.environ["REPRO_RD_BACKEND"] = "jnp"
+            chain, chain_us = timed(lambda: replica_deletion_batch(probs))
+        finally:
+            if saved_backend is None:
+                os.environ.pop("REPRO_RD_BACKEND", None)
+            else:
+                os.environ["REPRO_RD_BACKEND"] = saved_backend
+        if [a.alloc for a in walk] != [a.alloc for a in chain]:
+            raise AssertionError(f"rd sweep: chain != walk at burst={nb}")
+        burst_rows.append(
+            {
+                "burst": nb,
+                "m": m_burst,
+                "tasks_per_job": tasks_per_job,
+                "host_walk_us_per_job": round(walk_us / nb, 1),
+                "jnp_chain_us_per_job": round(chain_us / nb, 1),
+            }
+        )
+        emit(f"rd/burst{nb}/host-walk", walk_us / nb, 0.0)
+        emit(f"rd/burst{nb}/jnp-chain", chain_us / nb, 0.0)
+
+    payload = {
+        "backend": jax.default_backend(),
+        "pallas_interpret": not on_tpu,
+        "iters": iters,
+        "seed": seed,
+        "m_sweep": m_rows,
+        "pallas_interpret_probe": pallas_rows,
+        "burst_sweep": burst_rows,
+    }
+    path = os.path.join(RESULTS_DIR, out_json)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# rd sweep written to {path}", flush=True)
+    return payload
+
+
 def run_placement_churn(
     *,
     smoke: bool = False,
     cadences: tuple[int, ...] = CHURN_CADENCES,
+    orderings: tuple[str, ...] = CHURN_ORDERINGS,
     evict_rate: float = CHURN_EVICT_RATE,
     out_csv: str = "placement_churn.csv",
 ) -> list[dict]:
-    """The placement-churn scenario: {replication policy × cadence}.
+    """The placement-churn scenario: {replication policy × cadence} under
+    FIFO WF, plus {replication policy × reordering} at a fixed cadence.
 
     Every cell regenerates the bursty trace through a fresh
     ``PlacementStore`` (same seed → same initial placement for every
@@ -238,6 +435,14 @@ def run_placement_churn(
     tightens.  Blocks get 2-4 initial replicas (instead of the matrix's
     8-12) so churn actually bites: losing a replica narrows an eligible
     set by 25-50% and last-replica evictions are reachable.
+
+    The reordering rows (OCWF / OCWF-ACC / SETF at
+    ``CHURN_REORDER_CADENCE``) answer the ROADMAP's open question: every
+    replica add/evict changes eligible sets mid-trace, and reordering
+    policies re-place the *whole* outstanding set on each arrival — so
+    churn-driven locality changes are realized (or paid for) at each
+    rescan rather than only at admission.  OCWF and OCWF-ACC realize the
+    same schedule; their rows differ in overhead only.
     """
     from repro.placement import (
         HotBlockPolicy,
@@ -260,48 +465,57 @@ def run_placement_churn(
             return HotBlockPolicy(max_replicas=6, min_replicas=2, add_budget=16)
         return name
 
+    def run_cell(repl_policy: str, ordering: str, every: int) -> dict:
+        store = PlacementStore(n_servers, policy=churn_policy(repl_policy))
+        jobs = generate("bursty", store=store, **trace_kw)
+        horizon = (
+            max(j.arrival for j in jobs)
+            + trace_kw["total_tasks"] // n_servers
+            + 50
+        )
+        events = churn_timeline(
+            store,
+            horizon=horizon,
+            rebalance_every=every,
+            evict_rate=evict_rate,
+            seed=trace_kw["seed"] + 1,
+        )
+        engine = SchedulingEngine(
+            n_servers,
+            make_policy("wf", ordering),
+            events=events,
+            placement=store,
+        )
+        t0 = time.perf_counter()
+        res = engine.run(jobs)
+        wall = time.perf_counter() - t0
+        row = {
+            "repl_policy": repl_policy,
+            "ordering": ordering,
+            "rebalance_every": every,
+            "evict_rate": evict_rate,
+            "mean_jct": round(res.mean_jct, 3),
+            "p99_jct": round(res.jct_percentile(99), 3),
+            "failed_jobs": len(res.failed_jobs),
+            "reassigned": res.reassignments,
+            "replicas_added": store.replicas_added,
+            "replicas_evicted": store.replicas_evicted,
+            "makespan": res.makespan,
+            "wall_s": round(wall, 3),
+        }
+        emit(
+            f"placement_churn/{repl_policy}/{ordering}/every{every}",
+            res.mean_overhead_s * 1e6,
+            res.mean_jct,
+        )
+        return row
+
     rows: list[dict] = []
     for repl_policy in list_replication_policies():
         for every in cadences:
-            store = PlacementStore(n_servers, policy=churn_policy(repl_policy))
-            jobs = generate("bursty", store=store, **trace_kw)
-            horizon = (
-                max(j.arrival for j in jobs)
-                + trace_kw["total_tasks"] // n_servers
-                + 50
-            )
-            events = churn_timeline(
-                store,
-                horizon=horizon,
-                rebalance_every=every,
-                evict_rate=evict_rate,
-                seed=trace_kw["seed"] + 1,
-            )
-            engine = SchedulingEngine(
-                n_servers, make_policy("wf"), events=events, placement=store
-            )
-            t0 = time.perf_counter()
-            res = engine.run(jobs)
-            wall = time.perf_counter() - t0
-            row = {
-                "repl_policy": repl_policy,
-                "rebalance_every": every,
-                "evict_rate": evict_rate,
-                "mean_jct": round(res.mean_jct, 3),
-                "p99_jct": round(res.jct_percentile(99), 3),
-                "failed_jobs": len(res.failed_jobs),
-                "reassigned": res.reassignments,
-                "replicas_added": store.replicas_added,
-                "replicas_evicted": store.replicas_evicted,
-                "makespan": res.makespan,
-                "wall_s": round(wall, 3),
-            }
-            rows.append(row)
-            emit(
-                f"placement_churn/{repl_policy}/every{every}",
-                res.mean_overhead_s * 1e6,
-                res.mean_jct,
-            )
+            rows.append(run_cell(repl_policy, "fifo", every))
+        for ordering in orderings:
+            rows.append(run_cell(repl_policy, ordering, CHURN_REORDER_CADENCE))
     write_csv(os.path.join(RESULTS_DIR, out_csv), rows, CHURN_FIELDS)
     print(f"# placement churn table written to results/{out_csv}", flush=True)
     return rows
@@ -357,6 +571,12 @@ def main(argv: list[str] | None = None) -> None:
         "M and emit results/BENCH_waterlevel.json instead of the matrix",
     )
     parser.add_argument(
+        "--rd-sweep", action="store_true",
+        help="benchmark RD per-arrival overhead (host vs jnp vs Pallas) "
+        "across M and burst sizes and emit results/BENCH_rd.json instead "
+        "of the matrix",
+    )
+    parser.add_argument(
         "--placement-churn", action="store_true",
         help="run the placement-churn scenario ({replication policy × "
         "re-replication cadence} under replica evictions) and emit "
@@ -370,14 +590,26 @@ def main(argv: list[str] | None = None) -> None:
         run_waterlevel_sweep(iters=3 if args.smoke else 10)
         return
 
+    if args.rd_sweep:
+        if not args.no_header:
+            print("name,us_per_call,derived", flush=True)
+        if args.smoke:
+            run_rd_sweep(
+                ms=(64, 512), bursts=(1, 8), n_tasks=64, iters=2
+            )
+        else:
+            run_rd_sweep()
+        return
+
     if args.placement_churn:
         if not args.no_header:
             print("name,us_per_call,derived", flush=True)
         rows = run_placement_churn(smoke=args.smoke)
         print_table(
             rows,
-            ["repl_policy", "rebalance_every", "mean_jct", "p99_jct",
-             "failed_jobs", "reassigned", "replicas_added", "makespan"],
+            ["repl_policy", "ordering", "rebalance_every", "mean_jct",
+             "p99_jct", "failed_jobs", "reassigned", "replicas_added",
+             "makespan"],
         )
         return
 

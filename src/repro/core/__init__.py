@@ -20,7 +20,12 @@ from .instance import (
     group_tasks,
 )
 from .obta import nlip, obta, solve_exact
-from .rd import replica_deletion
+from .rd import (
+    replica_deletion,
+    replica_deletion_auto,
+    replica_deletion_batch,
+    resolve_rd_backend,
+)
 from .rd_plus import replica_deletion_plus
 from .reorder import (
     OutstandingJob,
@@ -52,15 +57,21 @@ ALGORITHMS = {
     "obta": obta,
     "wf": water_filling,
     "wf_jax": _wf_jax,
-    "rd": replica_deletion,
+    # backend-dispatched RD: host class-compression, the jnp fixed-shape
+    # program, or the fused Pallas strip kernel (REPRO_RD_BACKEND / auto:
+    # TPU->pallas, CPU->host); all assignment-identical to rd_reference
+    "rd": replica_deletion_auto,
     "rd_plus": replica_deletion_plus,
 }
 
 # assignment algorithms with a native many-problems admission path: one
 # call places a whole same-slot burst with eq. 2 commits between jobs
-# (everything else falls back to Policy.assign_batch's sequential walk)
+# (everything else falls back to Policy.assign_batch's sequential walk).
+# rd_plus stays on the walk: its 1-opt polish changes the assignment, so
+# eq. 2 must be committed on the *polished* result between jobs.
 BATCH_ALGORITHMS = {
     "wf_jax": _wf_jax_chain,
+    "rd": replica_deletion_batch,
 }
 
 __all__ = [
@@ -79,7 +90,10 @@ __all__ = [
     "obta",
     "solve_exact",
     "replica_deletion",
+    "replica_deletion_auto",
+    "replica_deletion_batch",
     "replica_deletion_plus",
+    "resolve_rd_backend",
     "OutstandingJob",
     "ReorderStats",
     "commit_busy",

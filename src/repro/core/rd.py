@@ -53,15 +53,126 @@ deterministic and ignore it.
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
+import os
+import sys
 
 import numpy as np
 
 from .instance import Assignment, AssignmentProblem
 
-__all__ = ["replica_deletion"]
+__all__ = [
+    "host_commit_walk",
+    "replica_deletion",
+    "replica_deletion_auto",
+    "replica_deletion_batch",
+    "resolve_rd_backend",
+]
 
 _BIG = 1 << 30
+
+RD_BACKENDS = ("host", "jnp", "pallas")
+
+# device RD packs two 15-bit server ids per sort-key word (and the pad
+# sentinel is the server count itself), so clusters wider than this stay
+# on the host path — the same order of bound as the waterlevel kernel's
+# PALLAS_MAX_M, and far past the paper's cluster sizes
+RD_DEVICE_MAX_M = (1 << 15) - 1
+
+
+def resolve_rd_backend(explicit: str | None = None) -> str:
+    """Decide the RD backend: ``host`` | ``jnp`` | ``pallas``.
+
+    ``explicit`` wins when given; otherwise ``REPRO_RD_BACKEND``
+    (``host``/``jnp``/``pallas``/``auto``), with ``auto`` choosing the
+    fused Pallas strip kernel on TPU and this module's class-compressed
+    host path elsewhere (on CPU the device formulation only runs the
+    kernel in interpret mode, and the host path is the faster of the
+    three — the ``--rd-sweep`` benchmark tracks all backends).
+
+    Mirrors :func:`repro.kernels.waterlevel.resolve_use_pallas`, with one
+    twist: this function lives on the host side and never *imports* jax —
+    ``auto`` consults :func:`jax.default_backend` only when jax is
+    already loaded.  A TPU session imports jax long before scheduling,
+    while a pure-host run must not pay a multi-second jax import inside
+    the first arrival's timed scheduling path.
+    """
+    choice = (
+        explicit
+        if explicit is not None
+        else os.environ.get("REPRO_RD_BACKEND", "auto")
+    )
+    if choice not in RD_BACKENDS + ("auto",):
+        raise ValueError(
+            f"REPRO_RD_BACKEND={choice!r}: expected one of "
+            f"{RD_BACKENDS + ('auto',)}"
+        )
+    if choice != "auto":
+        return choice
+    jax = sys.modules.get("jax")
+    if jax is not None and jax.default_backend() == "tpu":
+        return "pallas"
+    return "host"
+
+
+def replica_deletion_auto(problem: AssignmentProblem, seed: int = 0) -> Assignment:
+    """RD through the resolved backend (the ``rd`` registry entry).
+
+    ``host`` runs :func:`replica_deletion` below; ``jnp``/``pallas`` run
+    the fixed-shape device formulation in :mod:`repro.core.rd_jax`
+    (assignment-identical by construction, parity-tested against
+    :mod:`repro.core.rd_reference`).
+    """
+    backend = resolve_rd_backend()
+    if backend == "host" or problem.n_servers > RD_DEVICE_MAX_M:
+        return replica_deletion(problem, seed)
+    from .rd_jax import replica_deletion_jax
+
+    return replica_deletion_jax(problem, backend=backend)
+
+
+def host_commit_walk(problems: list[AssignmentProblem]) -> list[Assignment]:
+    """Sequential host-RD admission of a same-slot burst.
+
+    Each job is assigned against the busy vector left by its
+    predecessors via the eq. 2 commit — the same evolution
+    :meth:`repro.runtime.policies.Policy.assign_batch` produces for
+    algorithms without a native batch path.  The device chain and its
+    overflow fallback are both held to this walk's results.
+    """
+    from .reorder import commit_busy
+
+    out: list[Assignment] = []
+    busy = None
+    for prob in problems:
+        if busy is not None:
+            prob = dataclasses.replace(prob, busy=busy)
+        assignment = replica_deletion(prob)
+        out.append(assignment)
+        busy = commit_busy(prob.busy, assignment, prob.mu, prob.n_servers)
+    return out
+
+
+def replica_deletion_batch(problems: list[AssignmentProblem]) -> list[Assignment]:
+    """Admit a same-slot burst of RD problems (``BATCH_ALGORITHMS["rd"]``).
+
+    Device backends dispatch the whole burst as ONE chained device call
+    (:func:`repro.core.rd_jax.replica_deletion_jax_chain` — a
+    ``lax.scan`` over jobs committing eq. 2 between them, the RD twin of
+    ``water_fill_chain``); the host backend walks the burst with eq. 2
+    commits (:func:`host_commit_walk`).  Either way the results are
+    bit-identical to sequential per-arrival
+    :func:`replica_deletion_auto` calls.
+    """
+    backend = resolve_rd_backend()
+    if backend != "host" and all(
+        p.n_servers <= RD_DEVICE_MAX_M for p in problems
+    ):
+        from .rd_jax import replica_deletion_jax_chain
+
+        return replica_deletion_jax_chain(problems, backend=backend)
+    return host_commit_walk(problems)
 
 
 class _Cls:

@@ -1,0 +1,665 @@
+"""Fixed-shape Replica-Deletion on device — the jnp/Pallas form of RD.
+
+The class-compressed host RD (:mod:`repro.core.rd`) is the last
+scheduling hot path living in per-strip CPython.  This module recasts it
+as a fixed-shape array program driven by ``lax.while_loop`` so the whole
+deletion + dedup pipeline runs as one device dispatch (and a same-slot
+burst as one *chained* dispatch, the RD twin of ``water_fill_chain``).
+
+State is the class-compressed state made dense.  A *slot* is one
+equivalence class ``(group, surviving servers)``:
+
+- ``holders``: ``(C, A)`` int32 — the class's server set, sorted
+  ascending, padded with ``M`` (sorts after every real id); ``A`` is the
+  maximum initial availability width, and a class's holder row is
+  *static* for its lifetime (deletions spin members into a new slot).
+- ``size``/``cnt``/``grp``: ``(C,)`` member count (0 = drained or
+  unallocated), replica count, group id.
+- ``m1``/``b1``/``b2``: the cheapest-alternative tie-break triple of
+  :meth:`repro.core.rd._Cls._compute_alt`, computed once per slot.
+- ``dest``: ``(C, A)`` spin-off pointer cache aligned with ``holders``
+  (``dest[c, j]`` = slot holding members of ``c`` after a strip of
+  ``holders[c, j]``; ``-1`` = not yet materialized).
+- ``load``/``multi``/``busy_est``: ``(M,)`` delta-updated server state.
+
+One *strip* of server ``m`` is a vectorized select-target →
+bucket-walk → delta-update step: candidates (active, on ``m``, multi-
+copy) sort by the strip key ``(-count, alt, holders-row, group, slot)``
+— within one count bucket every class has the same cardinality, so
+comparing holder rows lexicographically *is* the reference's sorted
+server-tuple order — then a prefix-sum of member counts against the
+quota ``((load-1) mod μ)+1`` yields every class's deletion in one shot,
+and scatters re-home the members (spin-off slots are allocated from a
+bump counter; duplicate ``(group, set)`` slots reached via different
+strip paths are exchangeable under the total key, so no global dict is
+needed).  With ``backend="pallas"`` the sort + prefix walk runs as the
+fused kernel in :mod:`repro.kernels.rd` (bitonic network over the slot
+lanes with the multi-row lexicographic key, Hillis–Steele prefix sums —
+the waterlevel kernel's recipe); the surrounding delta updates are
+shared jnp either way, so the two device backends are permutation-
+identical by construction.
+
+Slot capacity ``C`` is fixed per dispatch (power-of-two padded, bounded
+by ``K + Σ_k size_k·(|S_k|-1)`` — one new class per member-deleting
+move is the worst case).  If the generous default cap is ever exceeded
+the program sets an ``overflow`` flag and the host adapter re-runs the
+instance through host RD, so results stay correct for any input.
+
+Every backend is *assignment-identical* to the executable specification
+in :mod:`repro.core.rd_reference` under the documented deterministic
+tie-breaks; ``tests/test_rd_parity.py`` asserts that (hypothesis +
+deterministic twins) and the engine-level schedule equality of the
+chained burst dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .instance import Assignment, AssignmentProblem
+from .rd import RD_DEVICE_MAX_M, replica_deletion
+
+__all__ = [
+    "replica_deletion_jax",
+    "replica_deletion_jax_chain",
+    "rd_slot_capacity",
+]
+
+_BIG = 1 << 30  # matches repro.core.rd._BIG (sole-copy alt sentinel)
+
+_MIN_LANES = 128  # TPU lane width: minimum padded slot capacity
+
+# sort keys pack two 15-bit server ids per int32 word: lexicographic on
+# the packed words == lexicographic on the sorted holder rows (fields are
+# fixed-width and the pad id M sorts after every real id), at half the
+# lexsort passes / kernel key rows.  Requires M <= RD_DEVICE_MAX_M.
+_PACK_BITS = 15
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _ceil_div(a: jax.Array, b: jax.Array) -> jax.Array:
+    return -(-a // b)
+
+
+def rd_slot_capacity(problem: AssignmentProblem) -> int:
+    """Slot capacity ``C`` for one instance (power of two, ≥128 lanes).
+
+    Every move event (one class losing members to one spin-off) creates
+    at most one slot and deletes at least one replica, so distinct slots
+    are bounded by ``K + Σ_k size_k·(|S_k|-1)``.  The practical count is
+    far smaller (a few × K·A at paper scale), so the cap is the *minimum*
+    of the hard bound and a generous heuristic — the heuristic keeps the
+    dense state small, the ``overflow`` flag + host fallback keeps the
+    rare blowout correct.
+    """
+    k = len(problem.groups)
+    a_max = max((len(g.servers) for g in problem.groups), default=1)
+    hard = k + sum(g.size * (len(g.servers) - 1) for g in problem.groups) + 1
+    heuristic = 32 * k * a_max + 256
+    return max(_MIN_LANES, _next_pow2(min(hard, heuristic)))
+
+
+def _pack_setkey(holders: jax.Array) -> jax.Array:
+    """(C, A) holder rows → (C, A/2) packed sort-key words."""
+    c_slots, a_pad = holders.shape
+    pairs = holders.reshape(c_slots, a_pad // 2, 2)
+    return (pairs[:, :, 0] << _PACK_BITS) | pairs[:, :, 1]
+
+
+class _RDDev(NamedTuple):
+    """The dense class-compressed state carried through the while loops."""
+
+    holders: jax.Array  # (C, A) i32, sorted asc, pad = M
+    setkey: jax.Array  # (C, A/2) i32 packed holder row (strip sort key)
+    dest: jax.Array  # (C, A) i32 spin-off pointers, -1 = none
+    size: jax.Array  # (C,) i32 members (0 = drained / unallocated)
+    cnt: jax.Array  # (C,) i32 replica count (static per slot)
+    grp: jax.Array  # (C,) i32 group id
+    m1: jax.Array  # (C,) i32 cheapest holder
+    b1: jax.Array  # (C,) i32 its initial busy time
+    b2: jax.Array  # (C,) i32 second-cheapest initial busy time
+    n_slots: jax.Array  # () i32 bump allocator
+    load: jax.Array  # (M,) i32
+    multi: jax.Array  # (M,) i32 multi-copy population per server
+    busy_est: jax.Array  # (M,) i32  b_m + ceil(load_m/mu_m)
+    overflow: jax.Array  # () bool — slot capacity exceeded, result invalid
+
+
+def _alt_triple(
+    holders: jax.Array, busy0: jax.Array, m_servers: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Vectorized :meth:`_Cls._compute_alt`: per-row ``(m1, b1, b2)``.
+
+    Rows are sorted ascending by id, so ``argmin``'s first-occurrence
+    convention reproduces the reference's first-strict-min holder.
+    """
+    busy_ext = jnp.concatenate(
+        [busy0.astype(jnp.int32), jnp.full((1,), _BIG, jnp.int32)]
+    )
+    hb = busy_ext[jnp.minimum(holders, m_servers)]  # (C, A); pads -> _BIG
+    rows = jnp.arange(holders.shape[0])
+    j1 = jnp.argmin(hb, axis=1)
+    b1 = hb[rows, j1]
+    m1 = holders[rows, j1]
+    b2 = jnp.min(hb.at[rows, j1].set(_BIG), axis=1)
+    return m1, b1, b2
+
+
+def _strip_order_jnp(
+    neg_key: jax.Array, altv: jax.Array, setkey: jax.Array, grp: jax.Array
+) -> jax.Array:
+    """Slot permutation realizing the strip key via ``jnp.lexsort``.
+
+    Key (most significant first): masked ``-count`` (``_BIG`` parks
+    non-candidates past every candidate), alt, the packed holder row
+    (ascending-lexicographic ≡ the reference's sorted server-tuple
+    order within a count bucket, where cardinalities are equal), group,
+    slot index — a total order, so the Pallas sorting network (same key,
+    unique final tie) yields the identical permutation.
+    """
+    c_slots, p_words = setkey.shape
+    keys = (jnp.arange(c_slots, dtype=jnp.int32), grp)
+    keys += tuple(setkey[:, a] for a in range(p_words - 1, -1, -1))
+    keys += (altv, neg_key)
+    return jnp.lexsort(keys)
+
+
+def _strip(
+    st: _RDDev,
+    m: jax.Array,
+    busy0: jax.Array,
+    mu: jax.Array,
+    *,
+    use_pallas: bool,
+    interpret: bool,
+) -> tuple[_RDDev, jax.Array]:
+    """Delete up to ``((load-1) mod μ)+1`` multi-copy replicas from ``m``.
+
+    The reference's sequential max-key pops collapse into one sort +
+    prefix-sum (keys are static within a strip — deleted members leave
+    ``m``); every delta update is a masked scatter.  Returns the state
+    and the number of replicas removed.
+    """
+    c_slots = st.holders.shape[0]
+    m_servers = st.load.shape[0]
+    rows = jnp.arange(c_slots, dtype=jnp.int32)
+    quota = ((st.load[m] - 1) % mu[m]) + 1
+
+    is_m = st.holders == m  # (C, A)
+    onm = is_m.any(axis=1)
+    cand = onm & (st.size > 0) & (st.cnt >= 2)
+    altv = jnp.where(st.m1 == m, st.b2, st.b1)
+    neg_key = jnp.where(cand, -st.cnt, _BIG)
+
+    # --- bucket walk: sort by the strip key, prefix-sum sizes vs quota ---
+    if use_pallas:
+        from repro.kernels.rd import rd_strip_takes_pallas
+
+        keyblock = jnp.concatenate(
+            [neg_key[None], altv[None], st.setkey.T, st.grp[None]]
+        )
+        take_sorted, order = rd_strip_takes_pallas(
+            keyblock, st.size, quota, interpret=interpret
+        )
+    else:
+        order = _strip_order_jnp(neg_key, altv, st.setkey, st.grp)
+        s_sorted = jnp.where(neg_key[order] != _BIG, st.size[order], 0)
+        prev = jnp.cumsum(s_sorted) - s_sorted
+        take_sorted = jnp.clip(quota - prev, 0, s_sorted)
+    take = jnp.zeros(c_slots, jnp.int32).at[order].set(take_sorted)
+    removed = take.sum()
+
+    # --- re-home the deleted members (spin-off slots, O(1) per class) ---
+    mv = take > 0
+    jpos = jnp.argmax(is_m, axis=1)  # m's column (valid where onm)
+    d_exist = st.dest[rows, jpos]
+    need_new = mv & (d_exist < 0)
+    d_new = st.n_slots + jnp.cumsum(need_new) - 1
+    d = jnp.where(need_new, d_new, d_exist)
+    created = need_new.sum()
+    overflow = st.overflow | (st.n_slots + created > c_slots)
+    n_slots = jnp.minimum(st.n_slots + created, c_slots)
+
+    # spun holder row: drop the (unique) entry equal to m, shift left
+    shifted = jnp.concatenate(
+        [st.holders[:, 1:], jnp.full((c_slots, 1), m_servers, jnp.int32)],
+        axis=1,
+    )
+    spun = jnp.where(jnp.cumsum(is_m, axis=1) > 0, shifted, st.holders)
+
+    tgt_new = jnp.where(need_new, d, c_slots)  # OOB rows are dropped
+    holders = st.holders.at[tgt_new].set(spun, mode="drop")
+    setkey = st.setkey.at[tgt_new].set(_pack_setkey(spun), mode="drop")
+    grp = st.grp.at[tgt_new].set(st.grp, mode="drop")
+    cnt = st.cnt.at[tgt_new].set(st.cnt - 1, mode="drop")
+    nm1, nb1, nb2 = _alt_triple(spun, busy0, m_servers)
+    m1 = st.m1.at[tgt_new].set(nm1, mode="drop")
+    b1 = st.b1.at[tgt_new].set(nb1, mode="drop")
+    b2 = st.b2.at[tgt_new].set(nb2, mode="drop")
+    dest = st.dest.at[jnp.where(mv, rows, c_slots), jpos].set(d, mode="drop")
+
+    tgt_mv = jnp.where(mv, d, c_slots)
+    size = (st.size - take).at[tgt_mv].add(take, mode="drop")
+
+    # --- delta-update the server vectors -------------------------------
+    multi = st.multi.at[m].add(-removed)
+    # members of a count-2 class became sole-copy on their last holder
+    c2 = mv & (st.cnt == 2)
+    last = spun[:, 0]
+    multi = multi.at[jnp.where(c2, last, m_servers)].add(-take, mode="drop")
+    load = st.load.at[m].add(-removed)
+    busy_est = st.busy_est.at[m].set(busy0[m] + _ceil_div(load[m], mu[m]))
+
+    return (
+        _RDDev(
+            holders=holders,
+            setkey=setkey,
+            dest=dest,
+            size=size,
+            cnt=cnt,
+            grp=grp,
+            m1=m1,
+            b1=b1,
+            b2=b2,
+            n_slots=n_slots,
+            load=load,
+            multi=multi,
+            busy_est=busy_est,
+            overflow=overflow,
+        ),
+        removed,
+    )
+
+
+def _peek_vec(st: _RDDev) -> jax.Array:
+    """Max replica count among active classes, per server (scatter-max)."""
+    m_servers = st.load.shape[0]
+    vals = jnp.where(st.size > 0, st.cnt, 0)[:, None]
+    vals = jnp.broadcast_to(vals, st.holders.shape)
+    return (
+        jnp.zeros(m_servers, jnp.int32)
+        .at[st.holders.reshape(-1)]
+        .max(vals.reshape(-1), mode="drop")
+    )
+
+
+def _refine_max(mask: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Narrow ``mask`` to the entries attaining ``max(key over mask)``."""
+    best = jnp.max(jnp.where(mask, key, jnp.iinfo(jnp.int32).min))
+    return mask & (key == best), best
+
+
+def _rd_core(
+    busy0: jax.Array,
+    mu: jax.Array,
+    holders0: jax.Array,
+    size0: jax.Array,
+    cnt0: jax.Array,
+    grp0: jax.Array,
+    n0: jax.Array,
+    *,
+    use_pallas: bool,
+    interpret: bool,
+) -> _RDDev:
+    """Run the whole RD (deletion + dedup) for one instance on device."""
+    c_slots, a_max = holders0.shape
+    m_servers = busy0.shape[0]
+    busy0 = busy0.astype(jnp.int32)
+    mu = mu.astype(jnp.int32)
+
+    m1, b1, b2 = _alt_triple(holders0, busy0, m_servers)
+    flat = holders0.reshape(-1)
+    bsize = jnp.broadcast_to(size0[:, None], holders0.shape).reshape(-1)
+    load = jnp.zeros(m_servers, jnp.int32).at[flat].add(bsize, mode="drop")
+    bmulti = jnp.broadcast_to(
+        jnp.where(cnt0 >= 2, size0, 0)[:, None], holders0.shape
+    ).reshape(-1)
+    multi = jnp.zeros(m_servers, jnp.int32).at[flat].add(bmulti, mode="drop")
+    st = _RDDev(
+        holders=holders0,
+        setkey=_pack_setkey(holders0),
+        dest=jnp.full((c_slots, a_max), -1, jnp.int32),
+        size=size0,
+        cnt=cnt0,
+        grp=grp0,
+        m1=m1,
+        b1=b1,
+        b2=b2,
+        n_slots=n0.astype(jnp.int32),
+        load=load,
+        multi=multi,
+        busy_est=busy0 + _ceil_div(load, mu),
+        overflow=jnp.asarray(False),
+    )
+    strip = functools.partial(
+        _strip, busy0=busy0, mu=mu, use_pallas=use_pallas, interpret=interpret
+    )
+
+    # ---- deletion phase --------------------------------------------------
+    # One iteration = one strip, with the level sweep folded in: when the
+    # previous sweep's target set is exhausted, the same iteration opens a
+    # new sweep (recomputes the max busy level + its servers and applies
+    # the sole-copy exit check) before selecting a target.  Target
+    # selection is a fresh argmin of (-peek count, -busy0, id) over the
+    # still-valid sweep targets — exactly what the host's lazy re-ranking
+    # heap realizes (stale keys are optimistic and validated at pop).
+    def del_cond(carry):
+        st, targets0, best, done = carry
+        return ~done & ~st.overflow
+
+    def del_body(carry):
+        st, targets0, best, done = carry
+        valid = targets0 & (st.busy_est == best) & (st.load > 0)
+        new_sweep = ~valid.any()
+        held = st.load > 0
+        nbest = jnp.max(jnp.where(held, st.busy_est, -1))
+        ntargets = held & (st.busy_est == nbest)
+        best = jnp.where(new_sweep, nbest, best)
+        targets0 = jnp.where(new_sweep, ntargets, targets0)
+        valid = jnp.where(new_sweep, ntargets, valid)
+        # sweep-entry exit: a target holding only sole-copy tasks means
+        # the max busy level cannot drop any further
+        done_now = new_sweep & (
+            (nbest < 0) | (ntargets & (st.multi == 0)).any()
+        )
+        peek = _peek_vec(st)
+        mask, p = _refine_max(valid, peek)
+        mask, _ = _refine_max(mask, busy0)
+        m = jnp.argmax(mask)  # ties fall to the smallest id
+        do_strip = ~done_now & (p >= 2)
+        st, removed = jax.lax.cond(
+            do_strip,
+            lambda s: strip(s, m),
+            lambda s: (s, jnp.asarray(0, jnp.int32)),
+            st,
+        )
+        # a strip that ran out of quota drained m's multi-copy classes;
+        # any still-max server with no multi-copy tasks ends the phase
+        tmask = (st.load > 0) & (st.busy_est == best)
+        done = (
+            done_now
+            | (~done_now & (p <= 1))
+            | (do_strip & (removed == 0))
+            | (do_strip & (tmask & (st.multi == 0)).any())
+        )
+        return st, targets0, best, done
+
+    st, _, _, _ = jax.lax.while_loop(
+        del_cond,
+        del_body,
+        (st, jnp.zeros(m_servers, bool), jnp.asarray(-2, jnp.int32),
+         jnp.asarray(False)),
+    )
+
+    # ---- final dedup phase ----------------------------------------------
+    # One strip per iteration from the busiest multi-copy holder,
+    # (busy_est, busy0, id) descending — the reference's lexsort pick.
+    def dd_cond(st):
+        return (st.multi > 0).any() & ~st.overflow
+
+    def dd_body(st):
+        mask = st.multi > 0
+        mask, _ = _refine_max(mask, st.busy_est)
+        mask, _ = _refine_max(mask, busy0)
+        m_servers_ = st.load.shape[0]
+        m = m_servers_ - 1 - jnp.argmax(mask[::-1])  # ties -> largest id
+        st, _ = strip(st, m)
+        return st
+
+    return jax.lax.while_loop(dd_cond, dd_body, st)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _rd_device(busy0, mu, holders0, size0, cnt0, grp0, n0, *, use_pallas,
+               interpret):
+    st = _rd_core(
+        busy0, mu, holders0, size0, cnt0, grp0, n0,
+        use_pallas=use_pallas, interpret=interpret,
+    )
+    return st.size, st.cnt, st.grp, st.holders[:, 0], st.overflow
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _rd_device_chain(busy0, mu, holders0, size0, cnt0, grp0, n0, *,
+                     use_pallas, interpret):
+    """Sequential admission of B jobs in one scan, carrying busy levels.
+
+    The RD twin of :func:`repro.core.wf_jax.water_fill_chain`: job ``i+1``
+    sees ``b_m + ⌈load_m^i/μ_m^i⌉`` (eq. 2) exactly as if the burst were
+    admitted one job at a time.  Padded jobs carry zero slots and commit
+    nothing.
+    """
+    m_servers = busy0.shape[0]
+
+    def job_step(busy, inp):
+        h0, s0, c0, g0, nn, mu_j = inp
+        st = _rd_core(
+            busy, mu_j, h0, s0, c0, g0, nn,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        loads = (
+            jnp.zeros(m_servers, jnp.int32)
+            .at[st.holders[:, 0]]
+            .add(st.size, mode="drop")
+        )
+        busy_next = busy + jnp.where(
+            loads > 0, _ceil_div(loads, mu_j.astype(jnp.int32)), 0
+        )
+        return busy_next, (st.size, st.cnt, st.grp, st.holders[:, 0],
+                           st.overflow)
+
+    _, outs = jax.lax.scan(
+        job_step,
+        busy0.astype(jnp.int32),
+        (holders0, size0, cnt0, grp0, n0, mu),
+    )
+    return outs
+
+
+def _dense_instance(
+    problem: AssignmentProblem, c_cap: int, a_pad: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+    """Initial slot arrays: one slot per task group, padded to (C, A)."""
+    m = problem.n_servers
+    holders = np.full((c_cap, a_pad), m, dtype=np.int32)
+    size = np.zeros(c_cap, dtype=np.int32)
+    cnt = np.zeros(c_cap, dtype=np.int32)
+    grp = np.zeros(c_cap, dtype=np.int32)
+    for k, g in enumerate(problem.groups):
+        holders[k, : len(g.servers)] = g.servers
+        size[k] = g.size
+        cnt[k] = len(g.servers)
+        grp[k] = k
+    return holders, size, cnt, grp, len(problem.groups)
+
+
+def _decode(
+    problem: AssignmentProblem,
+    size: np.ndarray,
+    cnt: np.ndarray,
+    grp: np.ndarray,
+    srv: np.ndarray,
+) -> Assignment:
+    act = np.flatnonzero(size > 0)
+    if not (cnt[act] == 1).all():  # pragma: no cover - device invariant
+        raise AssertionError("dedup must leave exactly one replica")
+    dense = np.zeros((len(problem.groups), problem.n_servers), dtype=np.int64)
+    np.add.at(dense, (grp[act], srv[act]), size[act])
+    alloc: list[dict[int, int]] = [
+        {int(m): int(row[m]) for m in np.flatnonzero(row)} for row in dense
+    ]
+    if int(size[act].sum()) != problem.n_tasks:  # pragma: no cover
+        raise AssertionError("class bookkeeping lost tasks")
+    result = Assignment(alloc=alloc, phi=0)
+    result.phi = result.realized_phi(problem)
+    result.validate(problem)
+    return result
+
+
+def _resolve_device(backend: str, c_cap: int, a_pad: int) -> tuple[bool, bool]:
+    """(use_pallas, interpret) for a given slot geometry.
+
+    Mirrors the waterlevel dispatcher: geometries past the kernel's
+    single-block bounds fall back to jnp regardless of the request, and
+    interpret mode engages automatically off-TPU.
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"device RD backend must be jnp|pallas, got {backend!r}")
+    use_pallas = backend == "pallas"
+    if use_pallas:
+        from repro.kernels.rd import rd_pallas_fits
+
+        use_pallas = rd_pallas_fits(c_cap, 3 + a_pad // 2)
+    interpret = jax.default_backend() != "tpu"
+    return use_pallas, interpret
+
+
+def replica_deletion_jax(
+    problem: AssignmentProblem, seed: int = 0, *, backend: str = "jnp"
+) -> Assignment:
+    """Host-facing RD that runs the strip pipeline on device.
+
+    Same assignment as :func:`repro.core.rd.replica_deletion` and the
+    reference oracle (parity-tested); ``backend`` picks the strip
+    engine (``jnp`` | ``pallas``).  A slot-capacity overflow (see
+    :func:`rd_slot_capacity`) transparently re-runs the instance on the
+    host path.
+    """
+    del seed  # deterministic; retained for API compatibility
+    if problem.n_servers > RD_DEVICE_MAX_M:
+        raise ValueError(
+            f"device RD supports at most {RD_DEVICE_MAX_M} servers "
+            f"(15-bit packed sort keys), got {problem.n_servers} — use the "
+            "host backend"
+        )
+    if problem.n_tasks == 0:
+        result = Assignment(alloc=[], phi=0)
+        result.phi = result.realized_phi(problem)
+        return result
+    c_cap = rd_slot_capacity(problem)
+    a_pad = _next_pow2(
+        max(2, max((len(g.servers) for g in problem.groups), default=1))
+    )
+    use_pallas, interpret = _resolve_device(backend, c_cap, a_pad)
+    holders, size, cnt, grp, n0 = _dense_instance(problem, c_cap, a_pad)
+    size_f, cnt_f, grp_f, srv_f, overflow = _rd_device(
+        jnp.asarray(problem.busy, jnp.int32),
+        jnp.asarray(problem.mu, jnp.int32),
+        jnp.asarray(holders),
+        jnp.asarray(size),
+        jnp.asarray(cnt),
+        jnp.asarray(grp),
+        jnp.asarray(n0, jnp.int32),
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    if bool(overflow):  # rare: slot heuristic exceeded — host re-run
+        return replica_deletion(problem)
+    return _decode(
+        problem,
+        np.asarray(size_f),
+        np.asarray(cnt_f),
+        np.asarray(grp_f),
+        np.asarray(srv_f),
+    )
+
+
+def replica_deletion_jax_chain(
+    problems: list[AssignmentProblem], *, backend: str = "jnp"
+) -> list[Assignment]:
+    """Admit a same-slot RD burst in one chained device dispatch.
+
+    Every problem must share one cluster and carry the *same* pre-burst
+    busy vector (eq. 2 is committed between jobs inside the scan) — the
+    contract of :meth:`SchedulingPolicy.assign_batch`, identical to
+    :func:`repro.core.wf_jax.water_filling_jax_chain`.  Assignments are
+    bit-identical to sequential :func:`replica_deletion_jax` calls with
+    busy re-read after each enqueue; any job overflowing the slot
+    capacity falls the whole burst back to the host commit walk.
+    """
+    if not problems:
+        return []
+    m = problems[0].n_servers
+    if any(p.n_servers != m for p in problems):
+        raise ValueError("chained RD requires a single cluster size")
+    if m > RD_DEVICE_MAX_M:
+        raise ValueError(
+            f"device RD supports at most {RD_DEVICE_MAX_M} servers "
+            f"(15-bit packed sort keys), got {m} — use the host backend"
+        )
+    base = problems[0].busy
+    if any(
+        p.busy is not base and not np.array_equal(p.busy, base)
+        for p in problems[1:]
+    ):
+        raise ValueError(
+            "chained RD requires every problem to carry the same pre-burst "
+            "busy vector (eq. 2 is committed inside the scan)"
+        )
+    c_cap = max(rd_slot_capacity(p) for p in problems)
+    a_pad = _next_pow2(
+        max(
+            2,
+            max(
+                (len(g.servers) for p in problems for g in p.groups),
+                default=1,
+            ),
+        )
+    )
+    use_pallas, interpret = _resolve_device(backend, c_cap, a_pad)
+    b_pad = _next_pow2(len(problems))
+    holders = np.full((b_pad, c_cap, a_pad), m, dtype=np.int32)
+    size = np.zeros((b_pad, c_cap), dtype=np.int32)
+    cnt = np.zeros((b_pad, c_cap), dtype=np.int32)
+    grp = np.zeros((b_pad, c_cap), dtype=np.int32)
+    n0 = np.zeros(b_pad, dtype=np.int32)
+    mu = np.ones((b_pad, m), dtype=np.int32)
+    for i, p in enumerate(problems):
+        holders[i], size[i], cnt[i], grp[i], n0[i] = _dense_instance(
+            p, c_cap, a_pad
+        )
+        mu[i] = p.mu
+    size_f, cnt_f, grp_f, srv_f, overflow = _rd_device_chain(
+        jnp.asarray(base, jnp.int32),
+        jnp.asarray(mu),
+        jnp.asarray(holders),
+        jnp.asarray(size),
+        jnp.asarray(cnt),
+        jnp.asarray(grp),
+        jnp.asarray(n0),
+        use_pallas=use_pallas,
+        interpret=interpret,
+    )
+    if bool(np.asarray(overflow).any()):
+        # an overflowed job corrupts every later job's busy carry: discard
+        # the device results and walk the burst on the host (identical
+        # assignments — that is the parity guarantee)
+        from .rd import host_commit_walk
+
+        return host_commit_walk(problems)
+    from .reorder import commit_busy
+
+    size_f = np.asarray(size_f)
+    cnt_f = np.asarray(cnt_f)
+    grp_f = np.asarray(grp_f)
+    srv_f = np.asarray(srv_f)
+    busy = np.asarray(base)
+    out: list[Assignment] = []
+    for i, p in enumerate(problems):
+        prob_i = p if i == 0 else dataclasses.replace(p, busy=busy)
+        a = _decode(prob_i, size_f[i], cnt_f[i], grp_f[i], srv_f[i])
+        out.append(a)
+        busy = commit_busy(busy, a, prob_i.mu, m)
+    return out

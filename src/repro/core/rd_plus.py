@@ -22,7 +22,7 @@ from __future__ import annotations
 import numpy as np
 
 from .instance import Assignment, AssignmentProblem
-from .rd import replica_deletion
+from .rd import replica_deletion_auto
 
 __all__ = ["replica_deletion_plus", "rebalance_1opt"]
 
@@ -90,4 +90,6 @@ def rebalance_1opt(
 
 
 def replica_deletion_plus(problem: AssignmentProblem, seed: int = 0) -> Assignment:
-    return rebalance_1opt(problem, replica_deletion(problem, seed))
+    # the RD phase runs through the resolved backend (host / jnp / the
+    # Pallas strip kernel — assignment-identical); the polish stays host
+    return rebalance_1opt(problem, replica_deletion_auto(problem, seed))

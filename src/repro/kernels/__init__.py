@@ -26,6 +26,8 @@ _EXPORTS = {
     "flash_attention": ".ops",
     "rmsnorm_fused": ".ops",
     "ssd_scan": ".ops",
+    "rd_pallas_fits": ".rd",
+    "rd_strip_takes_pallas": ".rd",
     "resolve_use_pallas": ".waterlevel",
     "water_fill_alloc_pallas": ".waterlevel",
     "water_level_pallas": ".waterlevel",

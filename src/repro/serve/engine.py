@@ -100,7 +100,12 @@ class ServeEngine:
 
     def _with_pos(self):
         cache = dict(self.cache)
-        cache["pos"] = jnp.asarray(self._pos)
+        # jnp.array (not asarray): asarray zero-copies the numpy buffer on
+        # CPU, and _step_single/step mutate self._pos in place right after
+        # dispatch — under async dispatch the computation could read the
+        # already-advanced positions (a real race seen as shifted decode
+        # outputs under load)
+        cache["pos"] = jnp.array(self._pos)
         return cache
 
     def step(self) -> list[Request]:

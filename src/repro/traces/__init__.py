@@ -29,6 +29,7 @@ from .bursty import BurstyTraceConfig, generate_bursty_trace
 from .cluster_v2017 import (
     ClusterTraceConfig,
     generate_cluster_trace,
+    iter_batch_task_csv,
     load_batch_task_csv,
     trace_available,
 )
@@ -43,6 +44,7 @@ __all__ = [
     "generate_bursty_trace",
     "generate_pareto_trace",
     "generate_cluster_trace",
+    "iter_batch_task_csv",
     "load_batch_task_csv",
     "TRACES",
     "generate",

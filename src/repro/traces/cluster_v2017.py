@@ -21,8 +21,19 @@ is too large to check in, and the offline container doesn't ship it):
   (:mod:`repro.traces.placement`) — one task group per CSV row, arrival
   slot from the job's earliest ``create_timestamp``.
 
+Reading is *chunked*: :func:`iter_batch_task_csv` yields validated row
+blocks of ``chunk_rows`` instead of materializing the file, and
+:func:`generate_cluster_trace` replays the CSV in two streaming passes —
+pass 1 keeps only per-job earliest timestamps (O(#jobs) memory) to pick
+the ``n_jobs`` arrival-order segment, pass 2 retains rows for the
+selected jobs only — so the published multi-GB ``batch_task.csv`` runs
+through without holding the parse in memory.  (A job's earliest
+timestamp can appear anywhere in the file, so a single bounded pass
+cannot pick the segment safely; two passes trade one extra scan for an
+exact, OOM-free replay.)
+
 A small fixture CSV (``tests/data/batch_task_sample.csv``) exercises the
-full path in tier-1 tests.
+full path — including a 2-row chunk size — in tier-1 tests.
 """
 
 from __future__ import annotations
@@ -43,9 +54,12 @@ __all__ = [
     "TraceRow",
     "resolve_trace_path",
     "trace_available",
+    "iter_batch_task_csv",
     "load_batch_task_csv",
     "generate_cluster_trace",
 ]
+
+DEFAULT_CHUNK_ROWS = 65_536
 
 ENV_VAR = "REPRO_CLUSTER_TRACE_V2017"
 
@@ -86,6 +100,7 @@ class ClusterTraceConfig:
     cap_lo: int = 3
     cap_hi: int = 5
     seed: int = 0
+    chunk_rows: int = DEFAULT_CHUNK_ROWS  # streaming block size
 
 
 def resolve_trace_path(path: str | None = None) -> str | None:
@@ -109,23 +124,37 @@ def _parse_int(value: str, column: str, line: int) -> int:
         ) from None
 
 
-def load_batch_task_csv(
-    path: str, *, statuses: tuple[str, ...] = ("Terminated",)
-) -> list[TraceRow]:
-    """Parse + schema-validate a ``batch_task.csv``-shaped file.
+def iter_batch_task_csv(
+    path: str,
+    *,
+    statuses: tuple[str, ...] = ("Terminated",),
+    chunk_rows: int = DEFAULT_CHUNK_ROWS,
+):
+    """Stream a ``batch_task.csv``-shaped file as validated row blocks.
 
-    Raises :class:`FileNotFoundError` when the file is absent (with the
-    env-var hint) and :class:`ValueError` on schema violations; rows
-    whose status is not in ``statuses`` or whose ``instance_num`` is 0
-    are skipped (they carry no work).
+    Yields lists of :class:`TraceRow` of at most ``chunk_rows`` entries,
+    so a multi-GB trace never materializes in memory.  Raises
+    :class:`FileNotFoundError` when the file is absent (with the env-var
+    hint) and :class:`ValueError` on schema violations; rows whose
+    status is not in ``statuses`` or whose ``instance_num`` is 0 are
+    skipped (they carry no work).  Path and ``chunk_rows`` are validated
+    eagerly at the call site, not at first iteration.
     """
+    if chunk_rows <= 0:
+        raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
     if not os.path.isfile(path):
         raise FileNotFoundError(
             f"cluster-trace-v2017 CSV not found at {path!r} — download "
             "batch_task.csv from the Alibaba clusterdata release and point "
             f"${ENV_VAR} (or ClusterTraceConfig.path) at it"
         )
-    rows: list[TraceRow] = []
+    return _iter_batch_task_rows(path, statuses, chunk_rows)
+
+
+def _iter_batch_task_rows(
+    path: str, statuses: tuple[str, ...], chunk_rows: int
+):
+    chunk: list[TraceRow] = []
     with open(path, newline="") as f:
         for line, record in enumerate(csv.reader(f), start=1):
             if not record or (len(record) == 1 and not record[0].strip()):
@@ -150,7 +179,7 @@ def load_batch_task_csv(
                 raise ValueError(f"batch_task.csv line {line}: empty job_id")
             if status not in statuses or instances == 0:
                 continue
-            rows.append(
+            chunk.append(
                 TraceRow(
                     create_timestamp=create,
                     job_id=record[2].strip(),
@@ -159,6 +188,24 @@ def load_batch_task_csv(
                     status=status,
                 )
             )
+            if len(chunk) >= chunk_rows:
+                yield chunk
+                chunk = []
+    if chunk:
+        yield chunk
+
+
+def load_batch_task_csv(
+    path: str, *, statuses: tuple[str, ...] = ("Terminated",)
+) -> list[TraceRow]:
+    """Whole-file convenience wrapper over :func:`iter_batch_task_csv`.
+
+    Fine for fixtures and segments; full-length replays should stay on
+    the chunked iterator (see :func:`generate_cluster_trace`).
+    """
+    rows: list[TraceRow] = []
+    for chunk in iter_batch_task_csv(path, statuses=statuses):
+        rows.extend(chunk)
     return rows
 
 
@@ -170,6 +217,12 @@ def generate_cluster_trace(cfg: ClusterTraceConfig, store=None) -> list[Job]:
     ``seconds_per_slot``.  With ``store`` given the groups are
     registered as placement blocks (``PlacedJob``), exactly like the
     synthetic scenarios.
+
+    The CSV is replayed in two streaming passes over
+    :func:`iter_batch_task_csv` blocks: pass 1 records only each job's
+    earliest timestamp to select the ``n_jobs`` arrival-order segment,
+    pass 2 retains rows for the selected jobs — peak memory is the
+    per-job timestamp map plus the selected segment, never the file.
     """
     path = resolve_trace_path(cfg.path)
     if path is None:
@@ -179,19 +232,36 @@ def generate_cluster_trace(cfg: ClusterTraceConfig, store=None) -> list[Job]:
         )
     if cfg.seconds_per_slot <= 0:
         raise ValueError("seconds_per_slot must be positive")
-    rows = load_batch_task_csv(path, statuses=cfg.statuses)
-    if not rows:
+
+    # pass 1: per-job earliest create_timestamp (O(#jobs) memory)
+    earliest: dict[str, int] = {}
+    for chunk in iter_batch_task_csv(
+        path, statuses=cfg.statuses, chunk_rows=cfg.chunk_rows
+    ):
+        for row in chunk:
+            prev = earliest.get(row.job_id)
+            if prev is None or row.create_timestamp < prev:
+                earliest[row.job_id] = row.create_timestamp
+    if not earliest:
         raise ValueError(f"no usable rows in {path!r} (statuses={cfg.statuses})")
-
-    by_job: dict[str, list[TraceRow]] = {}
-    for row in rows:
-        by_job.setdefault(row.job_id, []).append(row)
     # arrival order; ties broken by trace job id for determinism
-    ordered = sorted(
-        by_job.items(), key=lambda kv: (min(r.create_timestamp for r in kv[1]), kv[0])
-    )[: cfg.n_jobs]
+    selected_ids = [
+        job_id
+        for job_id, _ in sorted(earliest.items(), key=lambda kv: (kv[1], kv[0]))
+    ][: cfg.n_jobs]
+    selected = set(selected_ids)
 
-    t0 = min(r.create_timestamp for _, job_rows in ordered for r in job_rows)
+    # pass 2: retain rows for the selected segment only
+    by_job: dict[str, list[TraceRow]] = {job_id: [] for job_id in selected_ids}
+    for chunk in iter_batch_task_csv(
+        path, statuses=cfg.statuses, chunk_rows=cfg.chunk_rows
+    ):
+        for row in chunk:
+            if row.job_id in selected:
+                by_job[row.job_id].append(row)
+    ordered = [(job_id, by_job[job_id]) for job_id in selected_ids]
+
+    t0 = min(earliest[job_id] for job_id in selected_ids)
     rng = np.random.default_rng(cfg.seed)
     jobs: list[Job] = []
     for j, (_, job_rows) in enumerate(ordered):

@@ -1,0 +1,391 @@
+"""Host ↔ jnp ↔ Pallas Replica-Deletion parity suite.
+
+Three implementations of RD (paper Sec. III-C) must produce the *same
+assignment* on every instance, with :mod:`repro.core.rd_reference` as the
+executable specification:
+
+- host class-compressed (``repro.core.rd``, the CPU default),
+- the fixed-shape jnp program (``repro.core.rd_jax``, ``lax.while_loop``
+  over vectorized strips),
+- the fused Pallas strip kernel (``repro.kernels.rd``, interpret mode on
+  CPU) — permutation-identical to the jnp strip by construction.
+
+Deterministic twins (no hypothesis needed) pin the edge cases the device
+formulation has to get right — sole-copy termination of the deletion
+phase, the dedup phase's busiest-holder walk, duplicate groups, strips
+that exhaust their quota mid-class — and the hypothesis suite sweeps
+seeded instances.  Engine-level tests assert schedule equality of the
+chained ``rd_batch`` burst dispatch against sequential admission, and of
+the jnp backend against host across trace scenarios and orderings.
+
+Pallas cases run in interpret mode here, so instances stay tiny; the
+kernel's sort order is already pinned to the jnp path by the shared key
+construction (see ``test_kernels.py`` for the kernel-level twin).
+"""
+
+import numpy as np
+import pytest
+
+try:  # property tests engage when hypothesis is available (CI installs it)
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic twins below still run
+    HAVE_HYPOTHESIS = False
+
+from repro.core import AssignmentProblem, TaskGroup, commit_busy
+from repro.core.rd import (
+    replica_deletion,
+    replica_deletion_auto,
+    replica_deletion_batch,
+    resolve_rd_backend,
+)
+from repro.core.rd_reference import replica_deletion_reference
+from repro.runtime import SchedulingEngine, make_policy
+from repro.traces import generate
+
+
+def _random_instance(rng, m=8, k_hi=4, size_hi=12, avail_hi=4, busy_hi=8):
+    """Seeded instance generator shared by the twins and the properties.
+
+    Small μ and tight busy ranges force dense tie-breaking (equal busy
+    levels, equal replica counts, equal alternatives) — the regime where
+    a wrong sort key shows up as a different assignment.
+    """
+    k = int(rng.integers(1, k_hi + 1))
+    groups = tuple(
+        TaskGroup(
+            int(rng.integers(1, size_hi)),
+            tuple(
+                sorted(
+                    rng.choice(
+                        m, size=int(rng.integers(1, avail_hi + 1)), replace=False
+                    ).tolist()
+                )
+            ),
+        )
+        for _ in range(k)
+    )
+    return AssignmentProblem(
+        busy=rng.integers(0, busy_hi, m),
+        mu=rng.integers(1, 4, m),
+        groups=groups,
+    )
+
+
+def _assert_device_matches_reference(problem, backend, monkeypatch=None):
+    from repro.core import rd_jax
+
+    ref = replica_deletion_reference(problem)
+    if monkeypatch is not None:
+        # prove the device path actually ran: a silent slot-capacity
+        # overflow would fall back to host RD and hide device bugs
+        def _no_fallback(*a, **k):
+            raise AssertionError("device RD fell back to host unexpectedly")
+
+        monkeypatch.setattr(rd_jax, "replica_deletion", _no_fallback)
+    dev = rd_jax.replica_deletion_jax(problem, backend=backend)
+    assert dev.alloc == ref.alloc
+    assert dev.phi == ref.phi
+
+
+# ---- deterministic twins (run without hypothesis) ---------------------------
+
+
+def test_jnp_matches_reference_on_seeded_instances(rng, monkeypatch):
+    for _ in range(12):
+        _assert_device_matches_reference(_random_instance(rng), "jnp", monkeypatch)
+
+
+def test_pallas_matches_reference_on_seeded_instances(rng, monkeypatch):
+    for _ in range(3):
+        problem = _random_instance(rng, m=6, k_hi=3, size_hi=8, avail_hi=3)
+        _assert_device_matches_reference(problem, "pallas", monkeypatch)
+
+
+def test_sole_copy_termination(monkeypatch):
+    """Deletion must stop when a max-level server holds only sole-copy
+    tasks — even though other servers still hold deletable replicas."""
+    problem = AssignmentProblem(
+        busy=np.array([9, 0, 0, 0]),
+        mu=np.array([1, 1, 1, 1]),
+        groups=(
+            TaskGroup(3, (0,)),  # sole-copy backlog pins server 0 at max
+            TaskGroup(6, (1, 2, 3)),
+        ),
+    )
+    _assert_device_matches_reference(problem, "jnp", monkeypatch)
+    _assert_device_matches_reference(problem, "pallas", monkeypatch)
+
+
+def test_dedup_phase_busiest_holder_order(monkeypatch):
+    """Instances whose deletion phase exits immediately exercise the pure
+    dedup walk (strip order (busy_est, busy0, id) descending)."""
+    problem = AssignmentProblem(
+        busy=np.array([5, 5, 5]),
+        mu=np.array([2, 2, 2]),
+        groups=(
+            TaskGroup(1, (0,)),  # sole-copy on a max-busy server
+            TaskGroup(4, (0, 1, 2)),
+            TaskGroup(2, (1, 2)),
+        ),
+    )
+    _assert_device_matches_reference(problem, "jnp", monkeypatch)
+    _assert_device_matches_reference(problem, "pallas", monkeypatch)
+
+
+def test_duplicate_groups_and_quota_boundary(monkeypatch):
+    """Two groups with identical server sets are distinct classes (the
+    fixed order breaks their ties by group id), and a large group forces
+    strips that exhaust the quota mid-class."""
+    problem = AssignmentProblem(
+        busy=np.array([2, 2, 0, 0]),
+        mu=np.array([3, 3, 3, 3]),
+        groups=(
+            TaskGroup(7, (0, 1)),
+            TaskGroup(7, (0, 1)),
+            TaskGroup(11, (0, 2, 3)),
+        ),
+    )
+    _assert_device_matches_reference(problem, "jnp", monkeypatch)
+
+
+def test_single_server_and_single_task(monkeypatch):
+    for groups in (
+        (TaskGroup(5, (0,)),),
+        (TaskGroup(1, (0, 1)),),
+    ):
+        problem = AssignmentProblem(
+            busy=np.array([1, 0]), mu=np.array([1, 2]), groups=groups
+        )
+        _assert_device_matches_reference(problem, "jnp", monkeypatch)
+
+
+def test_empty_problem_matches_host():
+    problem = AssignmentProblem(
+        busy=np.array([3, 1]), mu=np.array([1, 1]), groups=()
+    )
+    from repro.core.rd_jax import replica_deletion_jax
+
+    host = replica_deletion(problem)
+    dev = replica_deletion_jax(problem, backend="jnp")
+    assert dev.alloc == host.alloc == []
+    assert dev.phi == host.phi
+
+
+def test_overflow_falls_back_to_host(monkeypatch):
+    """A slot capacity too small for the instance must flag overflow and
+    transparently re-run on the host path, not return garbage."""
+    from repro.core import rd_jax
+
+    rng = np.random.default_rng(3)
+    problem = _random_instance(rng, m=10, k_hi=4, size_hi=20, avail_hi=6)
+    # barely more slots than initial classes: the first spin-off overflows
+    monkeypatch.setattr(
+        rd_jax, "rd_slot_capacity", lambda p: len(p.groups) + 1
+    )
+    dev = rd_jax.replica_deletion_jax(problem, backend="jnp")
+    ref = replica_deletion_reference(problem)
+    assert dev.alloc == ref.alloc
+
+
+def test_backend_resolution_env(monkeypatch):
+    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
+    assert resolve_rd_backend() == "jnp"
+    monkeypatch.setenv("REPRO_RD_BACKEND", "host")
+    assert resolve_rd_backend() == "host"
+    assert resolve_rd_backend("pallas") == "pallas"
+    monkeypatch.setenv("REPRO_RD_BACKEND", "nope")
+    with pytest.raises(ValueError, match="REPRO_RD_BACKEND"):
+        resolve_rd_backend()
+    monkeypatch.setenv("REPRO_RD_BACKEND", "auto")
+    # CPU container: auto must stay on the host path (never regress the
+    # class-compressed per-arrival overhead)
+    import jax
+
+    expected = "pallas" if jax.default_backend() == "tpu" else "host"
+    assert resolve_rd_backend() == expected
+
+
+def test_device_rejects_oversized_cluster():
+    from repro.core.rd import RD_DEVICE_MAX_M
+    from repro.core.rd_jax import replica_deletion_jax
+
+    problem = AssignmentProblem(
+        busy=np.zeros(RD_DEVICE_MAX_M + 1, dtype=np.int64),
+        mu=np.ones(RD_DEVICE_MAX_M + 1, dtype=np.int64),
+        groups=(TaskGroup(1, (0, 1)),),
+    )
+    with pytest.raises(ValueError, match="at most"):
+        replica_deletion_jax(problem, backend="jnp")
+    # the auto dispatcher silently stays on host instead
+    host = replica_deletion(problem)
+    assert replica_deletion_auto(problem).alloc == host.alloc
+
+
+# ---- batched burst admission ------------------------------------------------
+
+
+def test_rd_batch_chain_matches_sequential_host(rng, monkeypatch):
+    """One chained device dispatch ≡ per-arrival host RD with eq. 2
+    commits — the burst-admission contract of BATCH_ALGORITHMS["rd"]."""
+    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
+    m = 10
+    base_busy = rng.integers(0, 6, m)
+    probs = [
+        AssignmentProblem(
+            busy=base_busy,
+            mu=rng.integers(1, 4, m),
+            groups=_random_instance(rng, m=m).groups,
+        )
+        for _ in range(3)
+    ]
+    chained = replica_deletion_batch(probs)
+    busy = base_busy.copy()
+    for prob, got in zip(probs, chained):
+        seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)
+        host = replica_deletion(seq)
+        got.validate(seq)
+        assert got.alloc == host.alloc
+        assert got.phi == host.phi
+        busy = commit_busy(busy, host, seq.mu, m)
+
+
+def test_rd_batch_host_walk_matches_sequential(rng, monkeypatch):
+    monkeypatch.setenv("REPRO_RD_BACKEND", "host")
+    m = 10
+    base_busy = rng.integers(0, 6, m)
+    probs = [
+        AssignmentProblem(
+            busy=base_busy,
+            mu=rng.integers(1, 4, m),
+            groups=_random_instance(rng, m=m).groups,
+        )
+        for _ in range(3)
+    ]
+    walked = replica_deletion_batch(probs)
+    busy = base_busy.copy()
+    for prob, got in zip(probs, walked):
+        seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)
+        host = replica_deletion(seq)
+        assert got.alloc == host.alloc
+        busy = commit_busy(busy, host, seq.mu, m)
+
+
+def test_chain_rejects_mismatched_busy(monkeypatch):
+    from repro.core.rd_jax import replica_deletion_jax_chain
+
+    g = (TaskGroup(2, (0, 1)),)
+    p1 = AssignmentProblem(busy=np.array([0, 0]), mu=np.array([1, 1]), groups=g)
+    p2 = AssignmentProblem(busy=np.array([1, 0]), mu=np.array([1, 1]), groups=g)
+    with pytest.raises(ValueError, match="same pre-burst busy"):
+        replica_deletion_jax_chain([p1, p2], backend="jnp")
+
+
+# ---- engine-level schedule equality -----------------------------------------
+
+_SMALL_TRACE = dict(n_jobs=8, total_tasks=260, n_servers=10)
+
+
+def _run(policy_name, ordering="fifo", **engine_kw):
+    jobs = generate("bursty", seed=7, **_SMALL_TRACE)
+    engine = SchedulingEngine(
+        _SMALL_TRACE["n_servers"],
+        make_policy(policy_name, ordering),
+        debug=True,
+        **engine_kw,
+    )
+    return engine.run(jobs)
+
+
+def test_engine_rd_jnp_batched_matches_host_sequential(monkeypatch):
+    monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
+    host = _run("rd")
+    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
+    batched = _run("rd")
+    sequential = _run("rd", batch_arrivals=False)
+    assert batched.jct == host.jct and batched.makespan == host.makespan
+    assert sequential.jct == host.jct
+
+
+@pytest.mark.parametrize("scenario", ["bursty", "pareto_diurnal"])
+@pytest.mark.parametrize("ordering", ["fifo", "ocwf-acc"])
+def test_engine_rd_backends_schedule_identical(scenario, ordering, monkeypatch):
+    """The acceptance matrix: host ≡ jnp engine schedules on bursty +
+    pareto_diurnal under fifo + ocwf-acc (rd and rd_plus)."""
+    jobs = generate(scenario, n_jobs=6, total_tasks=200, n_servers=8, seed=11)
+    for assign in ("rd", "rd_plus"):
+        monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
+        host = SchedulingEngine(8, make_policy(assign, ordering)).run(jobs)
+        monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
+        dev = SchedulingEngine(8, make_policy(assign, ordering)).run(jobs)
+        assert dev.jct == host.jct
+        assert dev.makespan == host.makespan
+
+
+def test_engine_rd_pallas_matches_host_tiny(monkeypatch):
+    """End-to-end Pallas (interpret) engine run on a tiny trace."""
+    jobs = generate("bursty", n_jobs=4, total_tasks=60, n_servers=6, seed=5)
+    monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
+    host = SchedulingEngine(6, make_policy("rd")).run(jobs)
+    monkeypatch.setenv("REPRO_RD_BACKEND", "pallas")
+    dev = SchedulingEngine(6, make_policy("rd")).run(jobs)
+    assert dev.jct == host.jct
+    assert dev.makespan == host.makespan
+
+
+# ---- hypothesis properties --------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        seed=st.integers(0, 100_000),
+        m=st.sampled_from([2, 5, 9]),
+        avail_hi=st.integers(1, 5),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_jnp_assignment_identity_property(seed, m, avail_hi):
+        rng = np.random.default_rng(seed)
+        problem = _random_instance(rng, m=m, avail_hi=min(avail_hi, m))
+        ref = replica_deletion_reference(problem)
+        from repro.core.rd_jax import replica_deletion_jax
+
+        dev = replica_deletion_jax(problem, backend="jnp")
+        assert dev.alloc == ref.alloc
+        assert dev.phi == ref.phi
+
+    @given(seed=st.integers(0, 100_000))
+    @settings(max_examples=4, deadline=None)
+    def test_pallas_assignment_identity_property(seed):
+        rng = np.random.default_rng(seed)
+        problem = _random_instance(rng, m=5, k_hi=2, size_hi=6, avail_hi=3)
+        ref = replica_deletion_reference(problem)
+        from repro.core.rd_jax import replica_deletion_jax
+
+        dev = replica_deletion_jax(problem, backend="pallas")
+        assert dev.alloc == ref.alloc
+
+    @given(seed=st.integers(0, 100_000), n_jobs=st.integers(1, 4))
+    @settings(max_examples=6, deadline=None)
+    def test_chain_property_matches_sequential(seed, n_jobs):
+        rng = np.random.default_rng(seed)
+        m = 8
+        base_busy = rng.integers(0, 6, m)
+        probs = [
+            AssignmentProblem(
+                busy=base_busy,
+                mu=rng.integers(1, 4, m),
+                groups=_random_instance(rng, m=m).groups,
+            )
+            for _ in range(n_jobs)
+        ]
+        from repro.core.rd_jax import replica_deletion_jax_chain
+
+        chained = replica_deletion_jax_chain(probs, backend="jnp")
+        busy = base_busy.copy()
+        for prob, got in zip(probs, chained):
+            seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)
+            host = replica_deletion(seq)
+            assert got.alloc == host.alloc
+            busy = commit_busy(busy, host, seq.mu, m)

@@ -107,6 +107,58 @@ def test_loader_tolerates_header_and_blank_lines(tmp_path):
     assert len(rows) == 1 and rows[0].instance_num == 4
 
 
+def test_chunked_iterator_matches_whole_file_load():
+    """iter_batch_task_csv at any chunk size ≡ the whole-file parse."""
+    from repro.traces import iter_batch_task_csv
+
+    whole = load_batch_task_csv(FIXTURE_CSV)
+    for chunk_rows in (1, 2, 3, 1_000):
+        chunks = list(
+            iter_batch_task_csv(FIXTURE_CSV, chunk_rows=chunk_rows)
+        )
+        assert all(len(c) <= chunk_rows for c in chunks)
+        assert [r for c in chunks for r in c] == whole
+    # validation is eager: errors surface at the call site, not at the
+    # first iteration somewhere far from the code that chose the path
+    with pytest.raises(ValueError, match="chunk_rows"):
+        iter_batch_task_csv(FIXTURE_CSV, chunk_rows=0)
+    with pytest.raises(FileNotFoundError, match="REPRO_CLUSTER_TRACE"):
+        iter_batch_task_csv("/nonexistent/batch_task.csv")
+
+
+def test_generate_cluster_trace_chunked_replay_identical():
+    """Two-pass streaming replay with a tiny chunk size must produce the
+    exact jobs of the unchunked parse — same segment selection, same
+    arrival slots, same groups."""
+    base = generate_cluster_trace(
+        ClusterTraceConfig(path=FIXTURE_CSV, n_servers=12)
+    )
+    chunked = generate_cluster_trace(
+        ClusterTraceConfig(path=FIXTURE_CSV, n_servers=12, chunk_rows=2)
+    )
+    assert len(chunked) == len(base)
+    for a, b in zip(base, chunked):
+        assert a.job_id == b.job_id
+        assert a.arrival == b.arrival
+        assert a.groups == b.groups
+        assert (a.mu == b.mu).all()
+
+
+def test_generate_cluster_trace_chunked_respects_n_jobs_cap():
+    """The streaming pass-1 segment selection honors the arrival-order
+    cap even when a chunk boundary splits a job's rows."""
+    base = generate_cluster_trace(
+        ClusterTraceConfig(path=FIXTURE_CSV, n_servers=12, n_jobs=3)
+    )
+    chunked = generate_cluster_trace(
+        ClusterTraceConfig(
+            path=FIXTURE_CSV, n_servers=12, n_jobs=3, chunk_rows=1
+        )
+    )
+    assert len(base) == len(chunked) == 3
+    assert [j.groups for j in base] == [j.groups for j in chunked]
+
+
 def test_generate_cluster_trace_from_fixture_runs_end_to_end():
     cfg = ClusterTraceConfig(
         path=FIXTURE_CSV, n_servers=12, seconds_per_slot=30.0

@@ -33,6 +33,14 @@ to the matrix CSVs).  On CPU the kernel runs in interpret mode, so the
 sweep tracks correctness + jnp-path latency there; the Pallas column is
 only meaningful on real TPU.
 
+``--online-sweep`` runs the open-loop serving benchmark: the bursty
+trace re-timed by :func:`repro.traces.replay_client` to each QPS point
+and driven through the event-stepped control plane (``step_mode=
+"event"``) under a rotating-straggler timeline, sweeping QPS ×
+{stealing, speculation}.  The ``plain`` cell is asserted
+schedule-identical to the slot-stepped loop; results land in
+``results/BENCH_online.json`` (uploaded nightly).
+
 ``--placement-churn`` runs the placement-churn scenario: the bursty
 trace generated through a :class:`repro.placement.PlacementStore`, with
 replica evictions and periodic rebalances injected as placement events,
@@ -49,12 +57,25 @@ import json
 import os
 import time
 
+from repro import registry
 from repro.runtime import SchedulingEngine, list_policies, make_policy
 from repro.traces import available_scenarios, generate
 
 from .common import RESULTS_DIR, emit, summarize, write_csv
 
-DEFAULT_ORDERINGS = ("fifo", "ocwf-acc", "setf")
+# the full ordering axis comes from the registry; the default matrix
+# drops plain "ocwf" (same schedule as ocwf-acc, strictly more overhead)
+DEFAULT_ORDERINGS = tuple(
+    o for o in registry.names("ordering") if o != "ocwf"
+)
+
+ONLINE_QPS = (0.25, 0.5, 1.0, 2.0)
+ONLINE_MODES = (  # {stealing, speculation} grid over the event loop
+    ("plain", False, False),
+    ("steal", True, False),
+    ("spec", False, True),
+    ("steal+spec", True, True),
+)
 
 WATERLEVEL_MS = (64, 512, 4096, 16384)
 
@@ -521,6 +542,101 @@ def run_placement_churn(
     return rows
 
 
+def run_online_sweep(
+    *,
+    smoke: bool = False,
+    qps_points: tuple[float, ...] = ONLINE_QPS,
+    out_json: str = "BENCH_online.json",
+) -> dict:
+    """Open-loop serving sweep: QPS × {stealing, speculation} over the
+    event-stepped control plane.
+
+    The bursty trace is re-timed by :func:`repro.traces.replay_client`
+    to each QPS point and driven through ``step_mode="event"`` under WF,
+    with a rotating straggler timeline (periodic 6× slowdowns) so the
+    online mechanisms have something to react to.  Each QPS point runs
+    the {stealing, speculation} grid; the ``plain`` cell doubles as an
+    equivalence probe — it is asserted schedule-identical to the slot-
+    stepped loop on the same re-timed trace.  The payload lands in
+    ``results/<out_json>`` (uploaded by nightly CI) with per-cell mean
+    JCT, steal/speculation counts, and the delta vs the plain loop.
+    """
+    from repro.runtime import ServerEvent
+    from repro.traces import replay_client
+
+    if smoke:
+        trace_kw = dict(n_jobs=25, total_tasks=4_000, n_servers=25, seed=5)
+    else:
+        trace_kw = dict(n_jobs=60, total_tasks=20_000, n_servers=40, seed=5)
+    base = generate("bursty", **trace_kw)
+    n_servers = trace_kw["n_servers"]
+    # rotating stragglers: every 30 slots another server runs 6x slow
+    # for 20 slots — the regime where idle-edge mechanisms pay off
+    events = tuple(
+        ServerEvent(s, "slowdown", (s // 30) % n_servers, factor=6.0)
+        for s in range(10, 600, 30)
+    ) + tuple(
+        ServerEvent(s + 20, "speedup", (s // 30) % n_servers)
+        for s in range(10, 600, 30)
+    )
+
+    rows: list[dict] = []
+    for qps in qps_points:
+        jobs = replay_client(base, qps=qps)
+        slot_res = SchedulingEngine(
+            n_servers, make_policy("wf"), events=events
+        ).run(jobs)
+        plain_jct = None
+        for mode, stealing, speculation in ONLINE_MODES:
+            engine = SchedulingEngine(
+                n_servers,
+                make_policy("wf"),
+                events=events,
+                step_mode="event",
+                stealing=stealing,
+                speculation=speculation,
+            )
+            t0 = time.perf_counter()
+            res = engine.run(jobs)
+            wall = time.perf_counter() - t0
+            if mode == "plain":
+                if (
+                    res.jct != slot_res.jct
+                    or res.makespan != slot_res.makespan
+                ):
+                    raise AssertionError(
+                        f"online sweep: event loop diverged from slot loop "
+                        f"at qps={qps}"
+                    )
+                plain_jct = res.mean_jct
+            row = {
+                "qps": qps,
+                "mode": mode,
+                "mean_jct": round(res.mean_jct, 3),
+                "p99_jct": round(res.jct_percentile(99), 3),
+                "jct_vs_plain": round(res.mean_jct - plain_jct, 3),
+                "steals": res.steals,
+                "speculations": res.speculations,
+                "spec_cancels": res.spec_cancels,
+                "makespan": res.makespan,
+                "wall_s": round(wall, 3),
+            }
+            rows.append(row)
+            emit(f"online/qps{qps}/{mode}", wall * 1e6, res.mean_jct)
+    payload = {
+        "scenario": "bursty+rotating-stragglers",
+        "trace_kw": trace_kw,
+        "qps_points": list(qps_points),
+        "sweep": rows,
+    }
+    path = os.path.join(RESULTS_DIR, out_json)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# online sweep written to {path}", flush=True)
+    return payload
+
+
 def print_table(rows: list[dict], cols: list[str] | None = None) -> None:
     cols = cols or ["scenario", "assign", "ordering", "mean_jct", "p99_jct",
                     "mean_overhead_us", "makespan"]
@@ -577,6 +693,12 @@ def main(argv: list[str] | None = None) -> None:
         "of the matrix",
     )
     parser.add_argument(
+        "--online-sweep", action="store_true",
+        help="run the open-loop online-serving sweep (QPS × {stealing, "
+        "speculation} over the event-stepped control plane) and emit "
+        "results/BENCH_online.json instead of the matrix",
+    )
+    parser.add_argument(
         "--placement-churn", action="store_true",
         help="run the placement-churn scenario ({replication policy × "
         "re-replication cadence} under replica evictions) and emit "
@@ -599,6 +721,17 @@ def main(argv: list[str] | None = None) -> None:
             )
         else:
             run_rd_sweep()
+        return
+
+    if args.online_sweep:
+        if not args.no_header:
+            print("name,us_per_call,derived", flush=True)
+        payload = run_online_sweep(smoke=args.smoke)
+        print_table(
+            payload["sweep"],
+            ["qps", "mode", "mean_jct", "p99_jct", "jct_vs_plain",
+             "steals", "speculations", "makespan"],
+        )
         return
 
     if args.placement_churn:

@@ -1,0 +1,139 @@
+"""One config object for every numeric-backend choice.
+
+Backend selection used to be spread over three ad-hoc surfaces: the
+``REPRO_WATERLEVEL_BACKEND`` and ``REPRO_RD_BACKEND`` environment
+variables plus per-call ``use_pallas`` flags.  This module is now the
+single resolution point:
+
+- :func:`resolve(kind)` returns the configured backend for ``kind``
+  (``"waterlevel"`` → ``auto|pallas|jnp``, ``"rd"`` →
+  ``auto|host|jnp|pallas``);
+- :func:`set_backend` is a context manager that scopes an explicit
+  choice (``with set_backend(rd="jnp"): ...``) — it nests, restores on
+  exit, and beats the environment;
+- the legacy env vars keep working through a deprecation shim: they are
+  consulted only when no :func:`set_backend` scope is active, and each
+  read warns :class:`DeprecationWarning` once per process.
+
+``auto`` is returned verbatim — platform-dependent auto-dispatch (TPU →
+device, CPU → host/jnp) stays with the consumer
+(:func:`repro.kernels.waterlevel.resolve_use_pallas`,
+:func:`repro.core.rd.resolve_rd_backend`) because *this* module must
+never import jax: RD's host path resolves its backend inside the first
+arrival's timed scheduling step, and a multi-second jax import does not
+belong there.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import warnings
+from typing import Iterator
+
+__all__ = ["BACKEND_KINDS", "BackendConfig", "current", "resolve", "set_backend"]
+
+# kind -> (env var shim, valid choices)
+BACKEND_KINDS: dict[str, tuple[str, tuple[str, ...]]] = {
+    "waterlevel": ("REPRO_WATERLEVEL_BACKEND", ("auto", "pallas", "jnp")),
+    "rd": ("REPRO_RD_BACKEND", ("auto", "host", "jnp", "pallas")),
+}
+
+_warned_env: set[str] = set()
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    """Explicit backend choices; ``None`` means "not set here" (fall
+    through to the env shim, then ``auto``)."""
+
+    waterlevel: str | None = None
+    rd: str | None = None
+
+    def __post_init__(self) -> None:
+        for kind in BACKEND_KINDS:
+            choice = getattr(self, kind)
+            if choice is not None:
+                _check(kind, choice, source="set_backend")
+
+
+def _check(kind: str, choice: str, *, source: str) -> str:
+    try:
+        _, valid = BACKEND_KINDS[kind]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend kind {kind!r}; known: {sorted(BACKEND_KINDS)}"
+        ) from None
+    if choice not in valid:
+        raise ValueError(
+            f"{source}: {kind} backend {choice!r}: expected one of {valid}"
+        )
+    return choice
+
+
+_stack: list[BackendConfig] = [BackendConfig()]
+
+
+def current() -> BackendConfig:
+    """The innermost active config (the process default when no
+    :func:`set_backend` scope is open)."""
+    return _stack[-1]
+
+
+def resolve(kind: str, explicit: str | None = None) -> str:
+    """The backend for ``kind``: explicit argument > :func:`set_backend`
+    scope > legacy env var (deprecated) > ``"auto"``.
+
+    ``auto`` is returned as-is; mapping it to a concrete backend is the
+    consumer's job (it may need the jax platform, which this module
+    deliberately never touches).
+    """
+    if explicit is not None:
+        return _check(kind, explicit, source="explicit backend")
+    env_var, _ = BACKEND_KINDS[_check_kind(kind)]
+    configured = getattr(current(), kind)
+    if configured is not None:
+        return configured
+    env = os.environ.get(env_var)
+    if env is not None:
+        if env_var not in _warned_env:
+            _warned_env.add(env_var)
+            warnings.warn(
+                f"{env_var} is deprecated; use "
+                f"repro.backend.set_backend({kind}={env!r}) instead "
+                f"(the env var keeps working for now)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        return _check(kind, env, source=env_var)
+    return "auto"
+
+
+def _check_kind(kind: str) -> str:
+    if kind not in BACKEND_KINDS:
+        raise KeyError(
+            f"unknown backend kind {kind!r}; known: {sorted(BACKEND_KINDS)}"
+        )
+    return kind
+
+
+@contextlib.contextmanager
+def set_backend(**choices: str) -> Iterator[BackendConfig]:
+    """Scope explicit backend choices, e.g.::
+
+        with set_backend(waterlevel="jnp", rd="host"):
+            engine.run(jobs)
+
+    Nested scopes override only the kinds they name; everything else
+    falls through to the enclosing scope.  Choices are validated at
+    entry (unknown kinds and invalid names raise immediately).
+    """
+    for kind in choices:
+        _check_kind(kind)
+    cfg = dataclasses.replace(current(), **choices)
+    _stack.append(cfg)
+    try:
+        yield cfg
+    finally:
+        _stack.pop()

@@ -10,6 +10,8 @@ Algorithms (paper Secs. III-IV):
 - :mod:`repro.core.wf_jax` — on-device vectorized water-filling for TPU.
 """
 
+from repro import registry
+
 from .bounds import phi_bounds, phi_minus, phi_plus
 from .flow import feasible_assignment
 from .instance import (
@@ -52,27 +54,35 @@ def _wf_jax_chain(problems: list[AssignmentProblem]) -> list[Assignment]:
     return water_filling_jax_chain(problems)
 
 
-ALGORITHMS = {
+# Registrations live in repro.registry; these module-level names are the
+# registry's own storage (live views), kept for the many existing callers.
+ALGORITHMS = registry.kind_dict("algorithm")
+BATCH_ALGORITHMS = registry.kind_dict("batch_algorithm")
+
+for _name, _fn in {
     "nlip": nlip,
     "obta": obta,
     "wf": water_filling,
     "wf_jax": _wf_jax,
     # backend-dispatched RD: host class-compression, the jnp fixed-shape
-    # program, or the fused Pallas strip kernel (REPRO_RD_BACKEND / auto:
-    # TPU->pallas, CPU->host); all assignment-identical to rd_reference
+    # program, or the fused Pallas strip kernel (repro.backend "rd" kind /
+    # auto: TPU->pallas, CPU->host); assignment-identical to rd_reference
     "rd": replica_deletion_auto,
     "rd_plus": replica_deletion_plus,
-}
+}.items():
+    registry.register("algorithm", _name, _fn, overwrite=True)
 
 # assignment algorithms with a native many-problems admission path: one
 # call places a whole same-slot burst with eq. 2 commits between jobs
 # (everything else falls back to Policy.assign_batch's sequential walk).
 # rd_plus stays on the walk: its 1-opt polish changes the assignment, so
 # eq. 2 must be committed on the *polished* result between jobs.
-BATCH_ALGORITHMS = {
+for _name, _fn in {
     "wf_jax": _wf_jax_chain,
     "rd": replica_deletion_batch,
-}
+}.items():
+    registry.register("batch_algorithm", _name, _fn, overwrite=True)
+del _name, _fn
 
 __all__ = [
     "ALGORITHMS",

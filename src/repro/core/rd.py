@@ -55,7 +55,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import os
 import sys
 
 import numpy as np
@@ -84,12 +83,14 @@ RD_DEVICE_MAX_M = (1 << 15) - 1
 def resolve_rd_backend(explicit: str | None = None) -> str:
     """Decide the RD backend: ``host`` | ``jnp`` | ``pallas``.
 
-    ``explicit`` wins when given; otherwise ``REPRO_RD_BACKEND``
-    (``host``/``jnp``/``pallas``/``auto``), with ``auto`` choosing the
-    fused Pallas strip kernel on TPU and this module's class-compressed
-    host path elsewhere (on CPU the device formulation only runs the
-    kernel in interpret mode, and the host path is the faster of the
-    three — the ``--rd-sweep`` benchmark tracks all backends).
+    ``explicit`` wins when given; otherwise the choice comes from
+    :func:`repro.backend.resolve` (``set_backend(rd=...)`` scopes, then
+    the deprecated ``REPRO_RD_BACKEND`` env shim), with ``auto`` choosing
+    the fused Pallas strip kernel on TPU and this module's
+    class-compressed host path elsewhere (on CPU the device formulation
+    only runs the kernel in interpret mode, and the host path is the
+    faster of the three — the ``--rd-sweep`` benchmark tracks all
+    backends).
 
     Mirrors :func:`repro.kernels.waterlevel.resolve_use_pallas`, with one
     twist: this function lives on the host side and never *imports* jax —
@@ -98,16 +99,9 @@ def resolve_rd_backend(explicit: str | None = None) -> str:
     while a pure-host run must not pay a multi-second jax import inside
     the first arrival's timed scheduling path.
     """
-    choice = (
-        explicit
-        if explicit is not None
-        else os.environ.get("REPRO_RD_BACKEND", "auto")
-    )
-    if choice not in RD_BACKENDS + ("auto",):
-        raise ValueError(
-            f"REPRO_RD_BACKEND={choice!r}: expected one of "
-            f"{RD_BACKENDS + ('auto',)}"
-        )
+    from repro import backend as backend_config
+
+    choice = backend_config.resolve("rd", explicit)
     if choice != "auto":
         return choice
     jax = sys.modules.get("jax")

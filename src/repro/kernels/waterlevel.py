@@ -41,7 +41,6 @@ back to jnp regardless of the override.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -77,24 +76,23 @@ def _next_pow2(n: int) -> int:
 def resolve_use_pallas(explicit: bool | None, m: int) -> bool:
     """Decide the water-level backend for a width-``m`` problem.
 
-    ``explicit`` wins when given; otherwise ``REPRO_WATERLEVEL_BACKEND``
-    (``pallas``/``jnp``/``auto``), with ``auto`` choosing Pallas only on
-    TPU.  Widths beyond :data:`PALLAS_MAX_M` always fall back to jnp
-    (the single-block kernel would not fit VMEM).
+    ``explicit`` wins when given; otherwise the choice comes from
+    :func:`repro.backend.resolve` (``set_backend(waterlevel=...)``
+    scopes, then the deprecated ``REPRO_WATERLEVEL_BACKEND`` env shim),
+    with ``auto`` choosing Pallas only on TPU.  Widths beyond
+    :data:`PALLAS_MAX_M` always fall back to jnp (the single-block
+    kernel would not fit VMEM).
     """
+    from repro import backend as backend_config
+
     if m > PALLAS_MAX_M:
         return False
     if explicit is not None:
         return bool(explicit)
-    env = os.environ.get("REPRO_WATERLEVEL_BACKEND", "auto")
-    if env not in ("pallas", "jnp", "auto"):
-        raise ValueError(
-            f"REPRO_WATERLEVEL_BACKEND={env!r}: expected 'pallas', 'jnp', "
-            "or 'auto'"
-        )
-    if env == "jnp":
+    choice = backend_config.resolve("waterlevel")
+    if choice == "jnp":
         return False
-    if env == "pallas":
+    if choice == "pallas":
         return True
     return jax.default_backend() == "tpu"
 

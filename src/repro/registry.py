@@ -1,0 +1,107 @@
+"""One name→implementation registry for every pluggable axis.
+
+The repo grew three ad-hoc registries — ``repro.core.ALGORITHMS`` /
+``BATCH_ALGORITHMS`` (assignment algorithms and their native burst
+paths) and ``repro.traces.TRACES`` (scenario generators) — each with its
+own lookup, error message, and enumeration helper.  This module is the
+single mechanism behind all of them: implementations register under a
+*kind* (``"algorithm"``, ``"batch_algorithm"``, ``"scenario"``,
+``"ordering"``) and a name, and everything that used to read one of the
+dicts resolves through :func:`resolve`.
+
+The legacy dicts stay importable: ``ALGORITHMS is kind_dict("algorithm")``
+— the registry owns the storage and the old names are live views, so
+third-party registrations through either surface see each other.
+
+Usage::
+
+    from repro import registry
+
+    @registry.register("algorithm", "my_heuristic")
+    def my_heuristic(problem): ...
+
+    assign = registry.resolve("algorithm", "my_heuristic")
+    registry.names("algorithm")   # ['my_heuristic', 'nlip', 'obta', ...]
+
+This module must stay dependency-free (no jax, no numpy, nothing from
+``repro``) so every subsystem can import it without cycles.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, TypeVar
+
+__all__ = ["register", "resolve", "names", "kinds", "kind_dict", "contains"]
+
+T = TypeVar("T")
+
+_SENTINEL = object()
+
+_REGISTRIES: dict[str, dict[str, Any]] = {}
+
+
+def kind_dict(kind: str) -> dict[str, Any]:
+    """The live name→value mapping for ``kind`` (created on first use).
+
+    Mutations through the returned dict are visible to :func:`resolve` —
+    this is what keeps the legacy module-level dicts working as aliases.
+    """
+    return _REGISTRIES.setdefault(kind, {})
+
+
+def register(
+    kind: str, name: str, value: Any = _SENTINEL, *, overwrite: bool = False
+) -> Callable[[T], T] | Any:
+    """Register ``value`` under ``(kind, name)``.
+
+    With ``value`` omitted, returns a decorator::
+
+        @register("scenario", "bursty")
+        def generate_bursty_trace(cfg, store=None): ...
+
+    Re-registering a name raises unless ``overwrite=True`` (or the value
+    is identical — idempotent re-imports are fine).
+    """
+    reg = kind_dict(kind)
+
+    def _put(v: T) -> T:
+        if not overwrite and name in reg and reg[name] is not v:
+            raise ValueError(
+                f"{kind} {name!r} already registered; pass overwrite=True "
+                f"to replace it"
+            )
+        reg[name] = v
+        return v
+
+    if value is _SENTINEL:
+        return _put
+    return _put(value)
+
+
+def resolve(kind: str, name: str) -> Any:
+    """Look up ``name`` within ``kind``; raises KeyError listing what is
+    registered (same contract as the legacy per-dict helpers)."""
+    reg = _REGISTRIES.get(kind)
+    if not reg:
+        raise KeyError(
+            f"no {kind!r} registry (known kinds: {sorted(_REGISTRIES)})"
+        )
+    try:
+        return reg[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown {kind} {name!r}; registered: {sorted(reg)}"
+        ) from None
+
+
+def contains(kind: str, name: str) -> bool:
+    return name in _REGISTRIES.get(kind, {})
+
+
+def names(kind: str) -> list[str]:
+    """Sorted names registered under ``kind``."""
+    return sorted(_REGISTRIES.get(kind, {}))
+
+
+def kinds() -> list[str]:
+    return sorted(_REGISTRIES)

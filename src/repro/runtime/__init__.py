@@ -1,6 +1,7 @@
 """Cluster runtime: scheduling engine, cluster state, events, policies.
 
-Layered as engine (drive loop) → policies (assignment × ordering) →
+Layered as loop (event-stepped control plane) → engine (slot-exact
+drive + admission/fault machinery) → policies (assignment × ordering) →
 cluster (queues + eq. 2 busy state) → events (fault timeline).
 ``ClusterSimulator`` remains as the legacy façade.
 """
@@ -8,6 +9,7 @@ cluster (queues + eq. 2 busy state) → events (fault timeline).
 from .cluster import ClusterState, QueueSegment
 from .engine import SchedulingEngine, SimResult
 from .events import EventTimeline, ServerEvent
+from .loop import ControlPlane
 from .policies import (
     ORDERINGS,
     Policy,
@@ -21,6 +23,7 @@ from .simulator import ClusterSimulator
 __all__ = [
     "ClusterSimulator",
     "ClusterState",
+    "ControlPlane",
     "EventTimeline",
     "ORDERINGS",
     "Policy",

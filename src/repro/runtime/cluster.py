@@ -169,6 +169,49 @@ class ClusterState:
                 q.remove(seg)
         return taken
 
+    # ---- segment surgery (work-stealing / speculation) -------------------
+
+    def pull_from_segment(
+        self, m: int, seg: QueueSegment, gids: list[int]
+    ) -> dict[int, int]:
+        """Remove the given original-group entries from ``seg`` (queued on
+        server ``m``), keeping the incremental busy vector in step.
+
+        Returns ``{gid: count}`` actually pulled; an emptied segment is
+        dropped from the queue.  This is the work-stealing primitive: the
+        puller re-places the pulled fragment through the policy exactly
+        like the fail path re-places stranded segments.
+        """
+        track = not self._busy_stale and self.alive[m]
+        cost_before = self._segment_cost(seg, m) if track else 0
+        pulled: dict[int, int] = {}
+        for g in gids:
+            cnt = seg.per_group.pop(g, 0)
+            if cnt:
+                pulled[g] = cnt
+        seg.total -= sum(pulled.values())
+        if track:
+            self._busy[m] -= cost_before - self._segment_cost(seg, m)
+        if seg.total == 0:
+            self.queues[m].remove(seg)
+        return pulled
+
+    def adopt_segment(self, m: int, seg: QueueSegment) -> None:
+        """Append an existing segment object to ``m``'s queue (speculative
+        clone placement), keeping the incremental busy vector in step.
+        ``seg.job_id`` must already be registered in :attr:`jobs`."""
+        self.queues[m].append(seg)
+        if not self._busy_stale and self.alive[m]:
+            self._busy[m] += self._segment_cost(seg, m)
+
+    def remove_segment(self, m: int, seg: QueueSegment) -> None:
+        """Remove a queued segment (speculative-loser cancellation),
+        delta-correcting the eq. 2 busy vector by the segment's remaining
+        ceiling cost."""
+        self.queues[m].remove(seg)
+        if not self._busy_stale and self.alive[m]:
+            self._busy[m] -= self._segment_cost(seg, m)
+
     # ---- job bookkeeping -------------------------------------------------
 
     def mark_failed(self, job_id: int) -> None:

@@ -61,19 +61,29 @@ class SimResult:
     makespan: int
     failed_jobs: list[int]  # jobs whose data became unavailable
     reassignments: int = 0  # tasks moved by fault handling
+    steals: int = 0  # tasks moved by work-stealing (event mode)
+    speculations: int = 0  # straggler fragments cloned (event mode)
+    spec_cancels: int = 0  # speculative losers canceled (event mode)
+    serve_latency: dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def mean_jct(self) -> float:
-        return float(np.mean(list(self.jct.values()))) if self.jct else 0.0
+        # NaN, not 0.0: an empty result must not read as "instant JCT"
+        return float(np.mean(list(self.jct.values()))) if self.jct else float("nan")
 
     @property
     def mean_overhead_s(self) -> float:
         return float(np.mean(self.overhead_s)) if self.overhead_s else 0.0
 
     def jct_percentile(self, q: float) -> float:
-        return float(np.percentile(list(self.jct.values()), q)) if self.jct else 0.0
+        if not self.jct:
+            return float("nan")
+        return float(np.percentile(list(self.jct.values()), q))
 
     def jct_cdf(self) -> tuple[np.ndarray, np.ndarray]:
+        if not self.jct:
+            empty = np.asarray([], dtype=np.int64)
+            return empty, empty.astype(np.float64)
         v = np.sort(np.asarray(list(self.jct.values())))
         return v, np.arange(1, v.size + 1) / v.size
 
@@ -99,7 +109,24 @@ class SchedulingEngine:
         on_slot: Callable[[ClusterState, int], None] | None = None,
         debug: bool = False,
         batch_arrivals: bool = True,
+        step_mode: str = "slot",
+        stealing: bool = False,
+        speculation: bool = False,
+        spec_factor: float = 2.0,
     ):
+        if step_mode not in ("slot", "event"):
+            raise ValueError(
+                f"unknown step_mode {step_mode!r}; expected 'slot' or 'event'"
+            )
+        if step_mode == "slot" and (stealing or speculation):
+            raise ValueError(
+                "work-stealing/speculation are online mechanisms; they "
+                "require step_mode='event'"
+            )
+        self.step_mode = step_mode
+        self.stealing = stealing
+        self.speculation = speculation
+        self.spec_factor = spec_factor
         self.n_servers = n_servers
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
         self.events = tuple(sorted(events, key=lambda e: e.slot))
@@ -456,6 +483,29 @@ class SchedulingEngine:
     # ---- main loop -------------------------------------------------------
 
     def run(self, jobs: list[Job]) -> SimResult:
+        if self.step_mode == "event":
+            from .loop import ControlPlane  # lazy: loop imports this module
+
+            plane = ControlPlane(
+                self.n_servers,
+                policy=self.policy,
+                events=self.events,
+                placement=self.placement,
+                stealing=self.stealing,
+                speculation=self.speculation,
+                spec_factor=self.spec_factor,
+                max_slots=self.max_slots,
+                on_slot=self.on_slot,
+                debug=self.debug,
+                batch_arrivals=self.batch_arrivals,
+            )
+            plane.submit_many(jobs)
+            result = plane.drain()
+            self.cluster = plane.engine.cluster  # expose final state as usual
+            return result
+        return self._run_slot(jobs)
+
+    def _run_slot(self, jobs: list[Job]) -> SimResult:
         self.cluster = cluster = ClusterState(
             self.n_servers, {j.job_id: j for j in jobs}, debug=self.debug
         )

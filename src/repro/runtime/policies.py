@@ -25,9 +25,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Protocol, runtime_checkable
 
+from repro import registry
 from repro.core import (
     ALGORITHMS,
-    BATCH_ALGORITHMS,
     Assignment,
     AssignmentProblem,
     OutstandingJob,
@@ -52,6 +52,15 @@ AssignFn = Callable[[AssignmentProblem], Assignment]
 BatchAssignFn = Callable[[list[AssignmentProblem]], list[Assignment]]
 
 ORDERINGS = ("fifo", "ocwf", "ocwf-acc", "setf")
+
+for _o, _desc in {
+    "fifo": "append arrivals; never reshuffle outstanding jobs",
+    "ocwf": "full shortest-estimated-time-first rescan (Alg. 3)",
+    "ocwf-acc": "OCWF with the Phi^- early-exit (same schedule)",
+    "setf": "shortest attained service first (static priority)",
+}.items():
+    registry.register("ordering", _o, _desc, overwrite=True)
+del _o, _desc
 
 
 @runtime_checkable
@@ -159,24 +168,23 @@ class Policy:
 
 def get_assigner(name: str) -> AssignFn:
     """Resolve a registered assignment algorithm by name."""
-    try:
-        return ALGORITHMS[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown assignment algorithm {name!r}; "
-            f"registered: {sorted(ALGORITHMS)}"
-        ) from None
+    return registry.resolve("algorithm", name)
 
 
 def make_policy(assign: str = "wf", ordering: str = "fifo") -> Policy:
     """Build a policy from registered names, e.g. ``make_policy("obta")``
     or ``make_policy("wf", "ocwf-acc")``."""
     name = assign if ordering == "fifo" else f"{assign}+{ordering}"
+    batch = (
+        registry.resolve("batch_algorithm", assign)
+        if registry.contains("batch_algorithm", assign)
+        else None
+    )
     return Policy(
         name=name,
         assigner=get_assigner(assign),
         ordering=ordering,
-        batch_assigner=BATCH_ALGORITHMS.get(assign),
+        batch_assigner=batch,
     )
 
 

@@ -20,7 +20,13 @@ from repro.core import AssignmentProblem, TaskGroup
 from repro.models import ModelConfig, decode_step, init_decode_cache, prefill
 from repro.runtime.policies import AssignFn, get_assigner
 
-__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine", "ReplicaRouter"]
+__all__ = [
+    "make_prefill_step",
+    "make_decode_step",
+    "ServeEngine",
+    "ReplicaRouter",
+    "RoutedServePool",
+]
 
 
 def make_prefill_step(cfg: ModelConfig, *, max_len: int | None = None) -> Callable:
@@ -233,3 +239,67 @@ class ReplicaRouter:
     def drain(self) -> None:
         """One time step: each replica consumes up to its rate."""
         self.queued = np.maximum(self.queued - self.rate, 0)
+
+
+class RoutedServePool:
+    """A fleet of :class:`ServeEngine` replicas behind one
+    :class:`ReplicaRouter`.
+
+    Each request is costed at ``len(prompt) + max_new_tokens`` tokens,
+    routed by the registered policy over the replicas holding its
+    model/LoRA (live placement store), and admitted to the replica that
+    received the bulk of the routed tokens.  Driving :meth:`step` from a
+    :class:`repro.runtime.loop.ControlPlane` heartbeat puts decode
+    progress on the same event timeline as cluster scheduling — one
+    ``step`` is one slot.
+    """
+
+    def __init__(self, engines: dict[int, ServeEngine], router: ReplicaRouter):
+        if router.n < 1 + max(engines, default=0) or not engines:
+            raise ValueError("router must span every replica id in engines")
+        self.engines = engines
+        self.router = router
+
+    def submit(
+        self,
+        req: Request,
+        *,
+        model: str | None = None,
+        adapter: str | None = None,
+        eligible: tuple[int, ...] | None = None,
+    ) -> int:
+        """Route ``req`` and admit it to a replica; returns the replica id."""
+        if eligible is None and model is None and adapter is None:
+            eligible = tuple(self.engines)
+        cost = len(req.prompt) + req.max_new_tokens
+        out = self.router.route(cost, eligible, model=model, adapter=adapter)
+        # a discrete request runs on ONE replica: the one the policy gave
+        # the bulk of its tokens (splits only arise at the water level)
+        routed = [kv for kv in out.items() if kv[0] in self.engines]
+        if not routed:
+            raise ValueError(
+                f"request {req.request_id} routed to replicas {sorted(out)} "
+                f"but no engine serves any of them"
+            )
+        replica = max(routed, key=lambda kv: (kv[1], -kv[0]))[0]
+        self.engines[replica].submit(req)
+        return replica
+
+    def step(self) -> list[Request]:
+        """One slot: every replica decodes once, the router drains once."""
+        finished: list[Request] = []
+        for engine in self.engines.values():
+            finished.extend(engine.step())
+        self.router.drain()
+        return finished
+
+    def busy(self) -> bool:
+        return (
+            bool(self.router.queued.any())
+            or any(e._pending for e in self.engines.values())
+            or any(
+                slot is not None
+                for e in self.engines.values()
+                for slot in e.slots
+            )
+        )

@@ -22,10 +22,12 @@ from __future__ import annotations
 
 from typing import Callable
 
+from repro import registry
 from repro.core import Job
 
 from .alibaba_like import TraceConfig, generate_trace
 from .bursty import BurstyTraceConfig, generate_bursty_trace
+from .clients import poisson_client, replay_client
 from .cluster_v2017 import (
     ClusterTraceConfig,
     generate_cluster_trace,
@@ -51,15 +53,22 @@ __all__ = [
     "list_scenarios",
     "scenario_available",
     "available_scenarios",
+    "poisson_client",
+    "replay_client",
 ]
 
-# scenario -> (config dataclass, generator)
-TRACES: dict[str, tuple[type, Callable]] = {
+# scenario -> (config dataclass, generator); the registry owns the
+# storage — TRACES is the live "scenario" kind view, kept for callers
+TRACES: dict[str, tuple[type, Callable]] = registry.kind_dict("scenario")
+
+for _name, _entry in {
     "alibaba": (TraceConfig, generate_trace),
     "bursty": (BurstyTraceConfig, generate_bursty_trace),
     "pareto_diurnal": (ParetoTraceConfig, generate_pareto_trace),
     "cluster_v2017": (ClusterTraceConfig, generate_cluster_trace),
-}
+}.items():
+    registry.register("scenario", _name, _entry, overwrite=True)
+del _name, _entry
 
 
 def generate(scenario: str, *, store=None, **overrides) -> list[Job]:

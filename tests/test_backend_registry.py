@@ -1,0 +1,159 @@
+"""Backend config object + unified name registry (the config surface).
+
+The backend satellite collapsed REPRO_WATERLEVEL_BACKEND /
+REPRO_RD_BACKEND / per-call flags into ``repro.backend``: explicit
+argument > ``set_backend`` scope > env var (deprecated shim) > auto.
+Both the env path and the config path are exercised against the real
+consumers (``resolve_rd_backend``, ``resolve_use_pallas``).  The
+registry satellite unified ALGORITHMS / BATCH_ALGORITHMS / TRACES /
+orderings into ``repro.registry`` with live backing-dict aliases.
+"""
+
+import warnings
+
+import pytest
+
+from repro import backend, registry
+
+
+@pytest.fixture(autouse=True)
+def _clean_env(monkeypatch):
+    monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_WATERLEVEL_BACKEND", raising=False)
+
+
+# ---- registry ---------------------------------------------------------------
+
+
+def test_registry_kinds_cover_all_axes():
+    import repro.core  # noqa: F401  (registers algorithms)
+    import repro.runtime.policies  # noqa: F401  (registers orderings)
+    import repro.traces  # noqa: F401  (registers scenarios)
+
+    assert {"algorithm", "batch_algorithm", "ordering", "scenario"} <= set(
+        registry.kinds()
+    )
+    assert {"obta", "nlip", "wf", "wf_jax", "rd", "rd_plus"} <= set(
+        registry.names("algorithm")
+    )
+    assert {"fifo", "ocwf", "ocwf-acc", "setf"} == set(
+        registry.names("ordering")
+    )
+    assert {"alibaba", "bursty", "pareto_diurnal", "cluster_v2017"} <= set(
+        registry.names("scenario")
+    )
+
+
+def test_legacy_dicts_are_live_registry_views():
+    from repro.core import ALGORITHMS, BATCH_ALGORITHMS
+    from repro.traces import TRACES
+
+    assert ALGORITHMS is registry.kind_dict("algorithm")
+    assert BATCH_ALGORITHMS is registry.kind_dict("batch_algorithm")
+    assert TRACES is registry.kind_dict("scenario")
+    # a registration through the registry is visible through the alias
+    registry.register("algorithm", "_test_live", lambda p: None)
+    try:
+        assert "_test_live" in ALGORITHMS
+    finally:
+        del ALGORITHMS["_test_live"]
+
+
+def test_register_decorator_and_duplicate_guard():
+    @registry.register("_test_kind", "thing")
+    def thing():
+        return 42
+
+    assert registry.resolve("_test_kind", "thing") is thing
+    assert registry.contains("_test_kind", "thing")
+    # re-registering the same value is a no-op; a new value raises
+    registry.register("_test_kind", "thing", thing)
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register("_test_kind", "thing", lambda: 0)
+    registry.register("_test_kind", "thing", lambda: 0, overwrite=True)
+    with pytest.raises(KeyError, match="thing"):
+        registry.resolve("_test_kind", "missing")
+    del registry.kind_dict("_test_kind")["thing"]
+
+
+def test_make_policy_resolves_through_registry():
+    from repro.runtime import make_policy
+
+    policy = make_policy("wf_jax", "fifo")
+    assert policy.batch_assigner is not None  # registered batch algorithm
+    assert make_policy("wf").batch_assigner is None
+
+
+# ---- backend config object --------------------------------------------------
+
+
+def test_resolve_precedence_explicit_beats_all(monkeypatch):
+    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
+    with backend.set_backend(rd="host"):
+        assert backend.resolve("rd", "pallas") == "pallas"
+
+
+def test_set_backend_scopes_nest_and_restore():
+    assert backend.resolve("rd") == "auto"
+    with backend.set_backend(rd="jnp", waterlevel="pallas"):
+        assert backend.resolve("rd") == "jnp"
+        assert backend.resolve("waterlevel") == "pallas"
+        with backend.set_backend(rd="host"):
+            assert backend.resolve("rd") == "host"
+            assert backend.resolve("waterlevel") == "pallas"  # inherited
+        assert backend.resolve("rd") == "jnp"
+    assert backend.resolve("rd") == "auto"
+
+
+def test_env_shim_still_works_with_deprecation(monkeypatch):
+    monkeypatch.setenv("REPRO_RD_BACKEND", "host")
+    backend._warned_env.discard("REPRO_RD_BACKEND")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert backend.resolve("rd") == "host"
+    assert any(
+        issubclass(w.category, DeprecationWarning)
+        and "set_backend" in str(w.message)
+        for w in caught
+    )
+    # config scope takes precedence over the env shim
+    with backend.set_backend(rd="jnp"):
+        assert backend.resolve("rd") == "jnp"
+
+
+def test_invalid_choices_rejected_with_source(monkeypatch):
+    with pytest.raises(ValueError, match="explicit"):
+        backend.resolve("rd", "nope")
+    monkeypatch.setenv("REPRO_RD_BACKEND", "nope")
+    with pytest.raises(ValueError, match="REPRO_RD_BACKEND"):
+        backend.resolve("rd")
+    with pytest.raises(ValueError, match="waterlevel"):
+        backend.BackendConfig(waterlevel="host")  # not a waterlevel choice
+    with pytest.raises(KeyError, match="nonsense"):
+        backend.set_backend(nonsense="x").__enter__()
+    with pytest.raises(KeyError):
+        backend.resolve("not-a-kind")
+
+
+def test_rd_consumer_env_and_config_paths(monkeypatch):
+    from repro.core.rd import resolve_rd_backend
+
+    assert resolve_rd_backend("pallas") == "pallas"  # explicit wins
+    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
+    assert resolve_rd_backend(None) == "jnp"  # env shim path
+    with backend.set_backend(rd="host"):
+        assert resolve_rd_backend(None) == "host"  # config path
+    monkeypatch.delenv("REPRO_RD_BACKEND")
+    assert resolve_rd_backend(None) in ("host", "pallas")  # auto
+
+
+def test_waterlevel_consumer_env_and_config_paths(monkeypatch):
+    from repro.kernels.waterlevel import PALLAS_MAX_M, resolve_use_pallas
+
+    monkeypatch.setenv("REPRO_WATERLEVEL_BACKEND", "pallas")
+    assert resolve_use_pallas(None, 64) is True  # env shim path
+    with backend.set_backend(waterlevel="jnp"):
+        assert resolve_use_pallas(None, 64) is False  # config path
+    # the device-shape gate still overrides every source
+    assert resolve_use_pallas(True, PALLAS_MAX_M + 1) is False
+    assert resolve_use_pallas(True, 64) is True

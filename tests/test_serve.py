@@ -89,3 +89,59 @@ def test_moe_balance_beats_static_and_conserves():
     for e in range(16):
         static[int(placement[e, 0])] += int(load[e])
     assert alloc.sum(axis=0).max() <= static.max()
+
+
+def test_routed_serve_pool_places_and_finishes():
+    """RoutedServePool: requests route by eq. 2 over the replica fleet
+    and every request decodes to completion on its routed engine."""
+    cfg = get_smoke_config("qwen1.5-4b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    from repro.serve.engine import RoutedServePool
+
+    engines = {
+        i: ServeEngine(params, cfg, batch_slots=2, max_len=64, eos_token=-1)
+        for i in range(2)
+    }
+    pool = RoutedServePool(engines, ReplicaRouter(2, tokens_per_step=8))
+    replicas = [
+        pool.submit(Request(i, np.array([3, 4, 5], np.int32), max_new_tokens=3))
+        for i in range(4)
+    ]
+    assert set(replicas) == {0, 1}  # WF spreads the four equal requests
+    assert pool.busy()
+    done = []
+    for _ in range(30):
+        done += pool.step()
+        if len(done) == 4 and not pool.busy():
+            break
+    assert {r.request_id for r in done} == {0, 1, 2, 3}
+    assert not pool.busy()
+
+
+def test_control_plane_serves_requests_on_timeline():
+    """Bare-router serving on the event timeline: latency follows eq. 2
+    and placement events change routing mid-stream (live locality)."""
+    from repro.placement import PlacementEvent, PlacementStore, model_block
+    from repro.runtime import ControlPlane
+
+    store = PlacementStore(3)
+    block = model_block("m")
+    store.add_block(block, (0, 1))
+    router = ReplicaRouter(3, tokens_per_step=10, placement=store)
+    plane = ControlPlane(
+        3,
+        policy="wf",
+        router=router,
+        placement=store,
+        events=(PlacementEvent(5, "evict", block=block, server=0),),
+    )
+    r0 = plane.submit_request(40, at=0, model="m")
+    plane.step_until(0)
+    assert plane.serve_latency[r0] == 2  # 40 tokens over {0,1} at 10/slot
+    assert router.queued[0] == 20 and router.queued[1] == 20
+    plane.step_until(6)  # heartbeats drain; evict at t=5 narrows to {1}
+    assert (router.queued == 0).all()
+    r1 = plane.submit_request(40, at=7, model="m")
+    res = plane.drain()
+    assert res.serve_latency[r1] == 4  # all 40 on replica 1 alone
+    assert router.queued[0] == 0

@@ -1,0 +1,40 @@
+"""reprolint: static invariant analysis + runtime sanitizers.
+
+The paper's guarantees (OBTA optimality, WF's K-group approximation
+factor, RD's deterministic tie-breaking) hold only if the implementation
+preserves invariants the type system can't see: eq. 2 busy times mutated
+solely through :class:`repro.runtime.cluster.ClusterState` delta
+helpers, deterministic iteration wherever order feeds a schedule, and no
+host/device buffer aliasing into async dispatch.  This package enforces
+them with tooling instead of review vigilance:
+
+- :mod:`repro.analysis.rules` — the AST rule set (R001–R006), one
+  visitor per invariant;
+- :mod:`repro.analysis.linter` — the driver behind
+  ``python -m repro.analysis src tests benchmarks`` (pragmas, baseline,
+  exit code — the CI gate);
+- :mod:`repro.analysis.runtime` — the dynamic complement for what AST
+  analysis can't prove: buffer-aliasing guards on jitted entrypoints
+  and the event-heap ordering check, active under
+  ``SchedulingEngine(debug=True)`` / ``ServeEngine(debug=True)`` or
+  globally via :func:`repro.analysis.runtime.enable`.
+
+This package is stdlib-only at import time (the linter must run in the
+lint CI job, which installs no jax), so heavyweight imports stay inside
+functions.
+"""
+
+from .linter import LintConfig, LintResult, lint_file, lint_paths, load_config, main
+from .rules import RULES, Violation, rule_ids
+
+__all__ = [
+    "LintConfig",
+    "LintResult",
+    "RULES",
+    "Violation",
+    "lint_file",
+    "lint_paths",
+    "load_config",
+    "main",
+    "rule_ids",
+]

@@ -1,0 +1,275 @@
+"""The reprolint driver: file walking, pragmas, baseline, CLI.
+
+Usage (the CI gate)::
+
+    PYTHONPATH=src python -m repro.analysis src tests benchmarks
+
+Exit status is 0 iff every violation is suppressed by an inline pragma
+or a baseline entry.  Suppression surfaces:
+
+- **pragma** — ``# reprolint: disable=R002 <reason>`` on the flagged
+  line.  The reason is mandatory: a pragma without one does *not*
+  suppress (the violation is reported with a note).  Multiple rules:
+  ``disable=R002,R003``.
+- **baseline** — entries in the config file (``.reprolint.cfg``, INI
+  format) of the form ``path::RULE`` or ``path::RULE::line``; the path
+  part is an fnmatch pattern against the repo-relative posix path.
+  Policy: the baseline is for *transitional* debt only — new code
+  suppresses with a pragma + reason or not at all.
+
+The config file also carries ``exclude`` path prefixes (the lint-fixture
+corpus under ``tests/fixtures/reprolint`` is deliberately full of
+positives and must not gate CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import configparser
+import dataclasses
+import fnmatch
+import os
+import re
+import sys
+
+from .rules import RULES, FileContext, Violation, rule_ids
+
+__all__ = [
+    "LintConfig",
+    "LintResult",
+    "lint_file",
+    "lint_paths",
+    "load_config",
+    "main",
+]
+
+CONFIG_NAME = ".reprolint.cfg"
+
+_PRAGMA_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Za-z0-9_,]+)[ \t]*(.*)$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    """Parsed ``.reprolint.cfg``: excluded path prefixes + baseline."""
+
+    exclude: tuple[str, ...] = ()
+    baseline: tuple[str, ...] = ()
+
+    def excludes(self, relpath: str) -> bool:
+        return any(
+            relpath == p or relpath.startswith(p.rstrip("/") + "/")
+            for p in self.exclude
+        )
+
+    def baselined(self, v: Violation) -> bool:
+        for entry in self.baseline:
+            parts = entry.split("::")
+            if len(parts) < 2:
+                continue
+            pat, rule = parts[0], parts[1]
+            if rule != v.rule or not fnmatch.fnmatch(v.path, pat):
+                continue
+            if len(parts) >= 3 and parts[2] and int(parts[2]) != v.line:
+                continue
+            return True
+        return False
+
+
+def load_config(path: str | None) -> LintConfig:
+    """Load ``path`` (or :data:`CONFIG_NAME` in the cwd); missing file →
+    empty config."""
+    if path is None:
+        path = CONFIG_NAME
+        if not os.path.exists(path):
+            return LintConfig()
+    parser = configparser.ConfigParser()
+    with open(path) as f:
+        parser.read_file(f)
+    if not parser.has_section("reprolint"):
+        raise ValueError(f"{path}: missing [reprolint] section")
+
+    def _lines(key: str) -> tuple[str, ...]:
+        raw = parser.get("reprolint", key, fallback="")
+        return tuple(
+            ln.strip()
+            for ln in raw.splitlines()
+            if ln.strip() and not ln.strip().startswith("#")
+        )
+
+    return LintConfig(exclude=_lines("exclude"), baseline=_lines("baseline"))
+
+
+def _module_name(relpath: str) -> str:
+    """Dotted module name for rule allow-lists (``src/repro/backend.py``
+    → ``repro.backend``; anything else keeps its path-derived name)."""
+    p = relpath.replace(os.sep, "/")
+    if p.startswith("src/"):
+        p = p[len("src/") :]
+    if p.endswith("/__init__.py"):
+        p = p[: -len("/__init__.py")]
+    elif p.endswith(".py"):
+        p = p[: -len(".py")]
+    return p.replace("/", ".")
+
+
+def _pragmas(source: str) -> dict[int, tuple[set[str], bool]]:
+    """line → (rule ids disabled, has_reason).  Reasonless pragmas are
+    recorded so the driver can annotate (but not suppress) the hit."""
+    out: dict[int, tuple[set[str], bool]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out[i] = (rules, bool(m.group(2).strip()))
+    return out
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: list[Violation]
+    suppressed: int = 0
+    baselined: int = 0
+    files: int = 0
+    errors: list[str] = dataclasses.field(default_factory=list)
+
+
+def lint_file(
+    relpath: str,
+    source: str,
+    config: LintConfig,
+    select: tuple[str, ...] | None = None,
+) -> LintResult:
+    """Run every (selected) rule over one file's source."""
+    result = LintResult(violations=[], files=1)
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        result.errors.append(f"{relpath}: syntax error: {e}")
+        return result
+    ctx = FileContext(relpath, _module_name(relpath), tree)
+    pragmas = _pragmas(source)
+    for rule_cls in RULES:
+        if select and rule_cls.id not in select:
+            continue
+        for v in rule_cls(ctx).check(tree):
+            disabled = pragmas.get(v.line)
+            if disabled and v.rule in disabled[0]:
+                if disabled[1]:
+                    result.suppressed += 1
+                    continue
+                v = dataclasses.replace(
+                    v,
+                    message=v.message
+                    + " [pragma ignored: a disable pragma needs a reason]",
+                )
+            if config.baselined(v):
+                result.baselined += 1
+                continue
+            result.violations.append(v)
+    return result
+
+
+def _collect(paths: list[str], config: LintConfig, root: str) -> list[str]:
+    files: list[str] = []
+    for p in paths:
+        ap = os.path.join(root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(ap):
+            files.append(os.path.relpath(ap, root))
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = sorted(
+                    d for d in dirnames if d != "__pycache__"
+                )
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        files.append(
+                            os.path.relpath(os.path.join(dirpath, fn), root)
+                        )
+        else:
+            raise FileNotFoundError(f"no such path: {p}")
+    rel = [f.replace(os.sep, "/") for f in files]
+    return [f for f in rel if not config.excludes(f)]
+
+
+def lint_paths(
+    paths: list[str],
+    config: LintConfig | None = None,
+    *,
+    root: str = ".",
+    select: tuple[str, ...] | None = None,
+) -> LintResult:
+    """Lint every ``.py`` file under ``paths`` (files or directories,
+    relative to ``root``); returns the aggregated :class:`LintResult`."""
+    config = config or LintConfig()
+    total = LintResult(violations=[])
+    for relpath in _collect(paths, config, root):
+        with open(os.path.join(root, relpath)) as f:
+            source = f.read()
+        r = lint_file(relpath, source, config, select)
+        total.violations.extend(r.violations)
+        total.suppressed += r.suppressed
+        total.baselined += r.baselined
+        total.files += r.files
+        total.errors.extend(r.errors)
+    total.violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return total
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint: AST invariant analyzer for this repo",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src", "tests", "benchmarks"],
+        help="files/directories to lint (default: src tests benchmarks)",
+    )
+    parser.add_argument(
+        "--config", default=None,
+        help=f"config file (default: ./{CONFIG_NAME} when present)",
+    )
+    parser.add_argument(
+        "--select", default=None,
+        help="comma-separated rule ids to run (default: all)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule table and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES:
+            print(f"{rule.id}  {rule.title}")
+            print(f"      {rule.rationale}")
+        return 0
+
+    select = None
+    if args.select:
+        select = tuple(s.strip() for s in args.select.split(","))
+        unknown = set(select) - set(rule_ids())
+        if unknown:
+            parser.error(f"unknown rule ids: {sorted(unknown)}")
+
+    config = load_config(args.config)
+    result = lint_paths(args.paths, config, select=select)
+    for err in result.errors:
+        print(err, file=sys.stderr)
+    for v in result.violations:
+        print(v.render())
+    notes = [f"{result.files} files"]
+    if result.suppressed:
+        notes.append(f"{result.suppressed} pragma-suppressed")
+    if result.baselined:
+        notes.append(f"{result.baselined} baselined")
+    if result.violations or result.errors:
+        print(
+            f"reprolint: {len(result.violations)} violation(s), "
+            f"{len(result.errors)} error(s) ({', '.join(notes)})"
+        )
+        return 1
+    print(f"reprolint: clean ({', '.join(notes)})")
+    return 0

@@ -1,0 +1,593 @@
+"""The reprolint rule set: one AST visitor per invariant.
+
+Each rule codifies a bug class this repo has actually hit (or whose
+absence a paper guarantee depends on).  Rules are pure AST analyses —
+they never import the code under inspection — and report
+:class:`Violation` records that the driver in :mod:`repro.analysis.linter`
+filters through pragmas and the baseline.
+
+The rule ↔ paper/incident mapping lives in ``docs/INVARIANTS.md``; the
+one-line ``title`` and ``rationale`` below are the source of truth for
+``python -m repro.analysis --list-rules``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+__all__ = ["Violation", "Rule", "RULES", "rule_ids"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One rule hit at one source location (path is repo-relative)."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.rule} {self.message}"
+
+
+class FileContext:
+    """Per-file facts every rule shares: resolved import aliases and the
+    module's dotted name (``src/repro/backend.py`` → ``repro.backend``)."""
+
+    def __init__(self, path: str, module: str, tree: ast.Module):
+        self.path = path
+        self.module = module
+        self.aliases: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def qualname(self, node: ast.AST) -> str | None:
+        """Dotted name of a Name/Attribute chain with the leading alias
+        resolved through this file's imports (``jnp.asarray`` →
+        ``jax.numpy.asarray``); None for non-name expressions."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        parts.reverse()
+        parts[0] = self.aliases.get(parts[0], parts[0])
+        return ".".join(parts)
+
+
+class Rule(ast.NodeVisitor):
+    """Base class: subclasses set ``id``/``title``/``rationale`` and
+    implement visitors that call :meth:`report`."""
+
+    id = "R000"
+    title = ""
+    rationale = ""
+
+    def __init__(self, ctx: FileContext):
+        self.ctx = ctx
+        self.violations: list[Violation] = []
+        self._reported: set[tuple[int, int]] = set()
+
+    def report(self, node: ast.AST, message: str) -> None:
+        loc = (node.lineno, node.col_offset)
+        if loc in self._reported:  # a node reachable through two scans
+            return
+        self._reported.add(loc)
+        self.violations.append(
+            Violation(
+                rule=self.id,
+                path=self.ctx.path,
+                line=node.lineno,
+                col=node.col_offset,
+                message=message,
+            )
+        )
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        self.visit(tree)
+        return self.violations
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by several rules
+# ---------------------------------------------------------------------------
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """``self.<attr>`` → attr name (None otherwise)."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _subscript_base_attr(node: ast.AST) -> ast.AST:
+    """Peel subscripts: ``x[i][j]`` → ``x``."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return node
+
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "jit"}
+
+
+def _is_jit_expr(ctx: FileContext, node: ast.AST) -> bool:
+    """True for expressions denoting ``jax.jit`` itself or a
+    ``functools.partial(jax.jit, ...)`` / ``jax.jit(...)`` application."""
+    q = ctx.qualname(node)
+    if q in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        fq = ctx.qualname(node.func)
+        if fq in _JIT_NAMES:
+            return True
+        if fq in ("functools.partial", "partial") and node.args:
+            return ctx.qualname(node.args[0]) in _JIT_NAMES
+    return False
+
+
+# ---------------------------------------------------------------------------
+# R001 — zero-copy aliasing of mutable instance buffers into jit
+# ---------------------------------------------------------------------------
+
+
+class R001AliasedMutableBuffer(Rule):
+    id = "R001"
+    title = "zero-copy aliasing of a mutated instance buffer into jit"
+    rationale = (
+        "jnp.asarray(self.x) zero-copies the live host buffer on CPU; if "
+        "any method mutates self.x in place, an async-dispatched jitted "
+        "computation can read the already-advanced values (the PR 5 "
+        "ServeEngine._with_pos decode race). Use jnp.array (copies)."
+    )
+
+    _ASARRAY = {"jax.numpy.asarray"}
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        mutated: dict[str, int] = {}  # attr -> first mutation line
+        for sub in ast.walk(node):
+            target = None
+            if isinstance(sub, ast.AugAssign):
+                target = sub.target
+            elif isinstance(sub, ast.Assign):
+                for t in sub.targets:
+                    if isinstance(t, ast.Subscript):
+                        target = t
+                        break
+            if target is None:
+                continue
+            # in-place writes only: self.x[i] = / self.x[i] += / self.x +=
+            if isinstance(target, ast.Subscript) or isinstance(sub, ast.AugAssign):
+                attr = _self_attr(_subscript_base_attr(target))
+                if attr is not None:
+                    mutated.setdefault(attr, sub.lineno)
+        if mutated:
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                if self.ctx.qualname(sub.func) not in self._ASARRAY:
+                    continue
+                for arg in sub.args:
+                    attr = _self_attr(arg)
+                    if attr in mutated:
+                        self.report(
+                            sub,
+                            f"jnp.asarray(self.{attr}) zero-copy aliases a "
+                            f"buffer mutated in place (line "
+                            f"{mutated[attr]}) — an async jitted dispatch "
+                            f"may read the mutated values; use jnp.array "
+                            f"(copies) instead",
+                        )
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# R002 — environment reads outside repro.backend
+# ---------------------------------------------------------------------------
+
+
+class R002EnvOutsideBackend(Rule):
+    id = "R002"
+    title = "os.environ/os.getenv use outside repro.backend"
+    rationale = (
+        "Backend choice must flow through repro.backend.resolve/"
+        "set_backend: ad-hoc env reads resolve at import or call time and "
+        "go stale against jit caches (and env writes in benchmarks leak "
+        "state across cells). The one warn-and-delegate shim lives in "
+        "repro.backend."
+    )
+
+    _ALLOWED_MODULES = {"repro.backend"}
+    _ENV_NAMES = {"os.environ", "os.getenv", "os.putenv", "os.unsetenv"}
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        if self.ctx.module in self._ALLOWED_MODULES:
+            return []
+        seen: set[tuple[int, int]] = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            if self.ctx.qualname(node) in self._ENV_NAMES:
+                loc = (node.lineno, node.col_offset)
+                if loc in seen:
+                    continue
+                seen.add(loc)
+                self.report(
+                    node,
+                    "environment access outside repro.backend — route "
+                    "backend choice through repro.backend.resolve/"
+                    "set_backend (pragma only deliberate non-backend uses)",
+                )
+        return self.violations
+
+
+# ---------------------------------------------------------------------------
+# R003 — host syncs inside jit-decorated / kernel hot paths
+# ---------------------------------------------------------------------------
+
+
+class R003HostSyncInJit(Rule):
+    id = "R003"
+    title = "host sync inside a jitted or kernel hot path"
+    rationale = (
+        ".item()/float(arr)/np.asarray/block_until_ready inside a "
+        "@jax.jit function (or a Pallas kernel module's hot path) forces "
+        "a device→host transfer per call, serializing the async dispatch "
+        "pipeline the schedulers' latency numbers depend on."
+    )
+
+    _SYNC_ATTRS = {"item", "block_until_ready"}
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        jitted_names = self._names_passed_to_jit(tree)
+        kernel_module = self.ctx.module.startswith("repro.kernels.")
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                decorated = any(
+                    _is_jit_expr(self.ctx, d) for d in node.decorator_list
+                )
+                if decorated or node.name in jitted_names:
+                    self._scan_scope(node, full=True)
+                elif kernel_module:
+                    # kernel modules: .item()/block_until_ready only —
+                    # host numpy at trace time (stage tables) is fine
+                    self._scan_scope(node, full=False)
+            elif isinstance(node, ast.Call) and _is_jit_expr(
+                self.ctx, node.func
+            ):
+                for arg in node.args:
+                    if isinstance(arg, ast.Lambda):
+                        self._scan_scope(arg, full=True)
+        return self.violations
+
+    def _names_passed_to_jit(self, tree: ast.Module) -> set[str]:
+        """Function names wrapped via ``jax.jit(fn, ...)`` in this module."""
+        names: set[str] = set()
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and self.ctx.qualname(node.func) in _JIT_NAMES
+                and node.args
+                and isinstance(node.args[0], ast.Name)
+            ):
+                names.add(node.args[0].id)
+        return names
+
+    def _scan_scope(self, scope: ast.AST, *, full: bool) -> None:
+        body = scope.body if not isinstance(scope, ast.Lambda) else [scope.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                # don't descend into nested defs? nested fns inside a jit
+                # scope are traced too — keep them in scope.
+                if not isinstance(node, ast.Call):
+                    continue
+                func = node.func
+                if isinstance(func, ast.Attribute) and func.attr in self._SYNC_ATTRS:
+                    self.report(
+                        node,
+                        f".{func.attr}() forces a host sync inside a "
+                        f"jitted/kernel hot path",
+                    )
+                    continue
+                q = self.ctx.qualname(func)
+                if q == "jax.block_until_ready":
+                    self.report(
+                        node, "jax.block_until_ready inside a jitted hot path"
+                    )
+                elif full and q == "numpy.asarray":
+                    self.report(
+                        node,
+                        "np.asarray on a traced value forces device→host "
+                        "transfer inside jit; use jnp.asarray",
+                    )
+                elif (
+                    full
+                    and isinstance(func, ast.Name)
+                    and func.id == "float"
+                    and len(node.args) == 1
+                    and not isinstance(node.args[0], ast.Constant)
+                ):
+                    self.report(
+                        node,
+                        "float(...) on a traced array forces a host sync "
+                        "inside jit",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# R004 — nondeterministic iteration / unseeded RNG feeding schedules
+# ---------------------------------------------------------------------------
+
+
+# construction of explicitly-seeded generator objects is the *fix* for
+# this rule, not a violation (bit-generator ctors take the seed directly)
+_NP_RANDOM_EXEMPT = {
+    "Generator",
+    "SeedSequence",
+    "BitGenerator",
+    "PCG64",
+    "PCG64DXSM",
+    "Philox",
+    "MT19937",
+    "SFC64",
+}
+
+_RANDOM_MODULE_FNS = {
+    "random",
+    "randint",
+    "randrange",
+    "choice",
+    "choices",
+    "shuffle",
+    "sample",
+    "uniform",
+    "gauss",
+    "seed",
+    "getrandbits",
+    "Random",
+}
+
+
+class R004NondeterministicOrder(Rule):
+    id = "R004"
+    title = "set-ordered iteration or unseeded global RNG"
+    rationale = (
+        "OBTA optimality, WF's K-group factor and RD's Fig. 9 tie-breaks "
+        "(and the slot≡event equivalence suite) are only meaningful under "
+        "deterministic iteration and owned, seeded RNG streams. Set "
+        "iteration order varies across processes (hash randomization); "
+        "the random/np.random module globals are shared mutable state."
+    )
+
+    def visit_Call(self, node: ast.Call) -> None:
+        q = self.ctx.qualname(node.func)
+        if q is not None:
+            if q.startswith("numpy.random."):
+                fn = q.rsplit(".", 1)[1]
+                if fn == "default_rng":
+                    if not node.args and not node.keywords:
+                        self.report(
+                            node,
+                            "np.random.default_rng() without a seed is "
+                            "nondeterministic; pass an explicit seed",
+                        )
+                elif fn not in _NP_RANDOM_EXEMPT:
+                    self.report(
+                        node,
+                        f"np.random.{fn} draws from the shared global RNG; "
+                        f"use an owned np.random.default_rng(seed)",
+                    )
+            elif q.split(".", 1)[0] == "random" and "." in q:
+                fn = q.split(".", 1)[1]
+                if fn == "Random":
+                    if not node.args:
+                        self.report(
+                            node,
+                            "random.Random() without a seed is "
+                            "nondeterministic; pass an explicit seed",
+                        )
+                elif fn in _RANDOM_MODULE_FNS:
+                    self.report(
+                        node,
+                        f"random.{fn} uses the shared global RNG; use an "
+                        f"owned random.Random(seed)",
+                    )
+        self.generic_visit(node)
+
+    # -- set iteration ------------------------------------------------------
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._scan_function(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_ClassDef = visit_FunctionDef
+
+    def visit_Module(self, node: ast.Module) -> None:
+        self._scan_function(node)
+        self.generic_visit(node)
+
+    def _walk_scope(self, node: ast.AST):
+        """Document-order walk that does NOT descend into nested scopes
+        (each scope tracks its own set-typed locals)."""
+        for child in ast.iter_child_nodes(node):
+            if isinstance(
+                child,
+                (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.ClassDef),
+            ):
+                continue
+            yield child
+            yield from self._walk_scope(child)
+
+    def _scan_function(self, scope: ast.AST) -> None:
+        set_names: set[str] = set()
+        for sub in self._walk_scope(scope):
+            if isinstance(sub, ast.Assign):
+                if self._is_setlike(sub.value, set_names):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            set_names.add(t.id)
+            elif isinstance(sub, ast.For):
+                self._check_iter(sub.iter, set_names)
+            elif isinstance(
+                sub, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)
+            ):
+                for gen in sub.generators:
+                    self._check_iter(gen.iter, set_names)
+
+    def _check_iter(self, it: ast.AST, set_names: set[str]) -> None:
+        if self._is_setlike(it, set_names):
+            self.report(
+                it,
+                "iteration over a set has nondeterministic order; sort "
+                "first (sorted(...)) wherever order can feed a schedule",
+            )
+
+    def _is_setlike(self, node: ast.AST, set_names: set[str]) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            if node.func.id in ("set", "frozenset"):
+                return True
+        if isinstance(node, ast.Name) and node.id in set_names:
+            return True
+        if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+        ):
+            return self._is_setlike(node.left, set_names) or self._is_setlike(
+                node.right, set_names
+            )
+        return False
+
+
+# ---------------------------------------------------------------------------
+# R005 — busy-time state written outside ClusterState's delta helpers
+# ---------------------------------------------------------------------------
+
+
+class R005BusyStateWrite(Rule):
+    id = "R005"
+    title = "direct write to eq. 2 busy-time state"
+    rationale = (
+        "ClusterState maintains the eq. 2 busy vector incrementally; "
+        "every mutation must go through its delta helpers (enqueue, "
+        "process_slot, pull_from_segment, adopt/remove_segment, ...) so "
+        "the incremental vector never diverges from the rescan. A stray "
+        "write silently corrupts every subsequent assignment."
+    )
+
+    _ALLOWED_MODULES = {"repro.runtime.cluster"}
+    _STATE_ATTRS = {"_busy", "_busy_stale"}
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        if self.ctx.module in self._ALLOWED_MODULES:
+            return []
+        return super().check(tree)
+
+    def _flag_target(self, node: ast.AST, stmt: ast.AST) -> None:
+        base = _subscript_base_attr(node)
+        if isinstance(base, ast.Attribute) and base.attr in self._STATE_ATTRS:
+            self.report(
+                stmt,
+                f"direct write to {base.attr} outside "
+                f"repro.runtime.cluster — mutate eq. 2 busy state only "
+                f"through ClusterState's delta helpers",
+            )
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._flag_target(t, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._flag_target(node.target, node)
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# R006 — registrations bypassing repro.registry
+# ---------------------------------------------------------------------------
+
+
+class R006RegistryBypass(Rule):
+    id = "R006"
+    title = "registration bypassing repro.registry"
+    rationale = (
+        "ALGORITHMS/BATCH_ALGORITHMS/TRACES/orderings are live views over "
+        "repro.registry storage; writing the dicts directly skips the "
+        "duplicate-name check and the one place enumeration/resolution "
+        "is defined. Register via repro.registry.register."
+    )
+
+    _ALLOWED_MODULES = {"repro.registry"}
+    _REGISTRY_DICTS = {"ALGORITHMS", "BATCH_ALGORITHMS", "TRACES", "ORDERINGS"}
+    _MUTATORS = {"setdefault", "update", "pop", "clear"}
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        if self.ctx.module in self._ALLOWED_MODULES:
+            return []
+        return super().check(tree)
+
+    def _is_registry_dict(self, node: ast.AST) -> bool:
+        q = self.ctx.qualname(node)
+        if q is not None and q.rsplit(".", 1)[-1] in self._REGISTRY_DICTS:
+            return True
+        # registry.kind_dict("x")[...] = ... / .update(...)
+        if isinstance(node, ast.Call):
+            fq = self.ctx.qualname(node.func)
+            if fq is not None and fq.endswith("kind_dict"):
+                return True
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            if isinstance(t, ast.Subscript) and self._is_registry_dict(t.value):
+                self.report(
+                    node,
+                    "direct registry-dict write bypasses repro.registry — "
+                    "use repro.registry.register(kind, name, value)",
+                )
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if (
+            isinstance(func, ast.Attribute)
+            and func.attr in self._MUTATORS
+            and self._is_registry_dict(func.value)
+        ):
+            self.report(
+                node,
+                f"registry-dict .{func.attr}() bypasses repro.registry — "
+                f"use repro.registry.register(kind, name, value)",
+            )
+        self.generic_visit(node)
+
+
+RULES: tuple[type[Rule], ...] = (
+    R001AliasedMutableBuffer,
+    R002EnvOutsideBackend,
+    R003HostSyncInJit,
+    R004NondeterministicOrder,
+    R005BusyStateWrite,
+    R006RegistryBypass,
+)
+
+
+def rule_ids() -> list[str]:
+    return [r.id for r in RULES]

@@ -1,6 +1,6 @@
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # reprolint: disable=R002 XLA device-count override must precede the first jax import
 
 # --- everything below may import jax (device count is now locked) --------
 import argparse  # noqa: E402

@@ -54,6 +54,7 @@ import heapq
 from typing import Callable
 
 from repro import registry
+from repro.analysis import runtime as sanitizers
 from repro.core import Job
 from repro.placement import PlacementEvent, PlacementStore
 
@@ -134,6 +135,10 @@ class ControlPlane:
             isinstance(e, PlacementEvent) for e in events
         ):
             raise ValueError("placement events require a placement store")
+        # process-wide sanitizers (repro.analysis.runtime.enable / the
+        # pytest --sanitize option) behave exactly like debug=True
+        debug = debug or sanitizers.enabled()
+        self.debug = debug
         # the engine is used for its admission / fault / placement
         # machinery only — the plane owns time, so the engine gets no
         # timeline of its own and its slot loop is never entered
@@ -373,6 +378,10 @@ class ControlPlane:
     def _handle_service(self, t: int) -> None:
         if t >= self.max_slots:
             raise RuntimeError("simulation exceeded max_slots — livelock?")
+        if self.debug:
+            # every tick: (t, prio, seq) keys must stay a unique,
+            # comparable total order with the heap property intact
+            sanitizers.check_event_heap(self._heap)
         cluster = self.engine.cluster
         if self.stealing:
             self._steal_scan()

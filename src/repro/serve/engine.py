@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import runtime as sanitizers
 from repro.core import AssignmentProblem, TaskGroup
 from repro.models import ModelConfig, decode_step, init_decode_cache, prefill
 from repro.runtime.policies import AssignFn, get_assigner
@@ -54,7 +55,14 @@ class Request:
 
 
 class ServeEngine:
-    """Single-replica continuous batching over a shared decode cache."""
+    """Single-replica continuous batching over a shared decode cache.
+
+    ``debug=True`` (or a process-wide :func:`repro.analysis.runtime.
+    enable`) arms the buffer-aliasing sanitizer: every decode dispatch
+    snapshots the position buffer at jit handoff and re-checks it at the
+    next sync point, catching the zero-copy aliasing race class (the
+    PR 5 ``_with_pos`` bug) the moment it is reintroduced.
+    """
 
     def __init__(
         self,
@@ -64,6 +72,7 @@ class ServeEngine:
         batch_slots: int = 8,
         max_len: int = 512,
         eos_token: int = 0,
+        debug: bool = False,
     ):
         self.params = params
         self.cfg = cfg
@@ -74,6 +83,8 @@ class ServeEngine:
         self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
         self._pos = np.zeros(batch_slots, np.int32)
         self._pending: list[Request] = []
+        self.debug = debug or sanitizers.enabled()
+        self._guard = sanitizers.BufferGuard() if self.debug else None
 
     def submit(self, req: Request) -> None:
         self._pending.append(req)
@@ -102,7 +113,10 @@ class ServeEngine:
         # only commit slot's position advance
         self._pos[slot] += 1
         self.cache = cache
-        return int(np.asarray(logits[slot, 0]).argmax())
+        nxt = int(np.asarray(logits[slot, 0]).argmax())
+        if self._guard is not None:  # sync point: dispatch completed above
+            self._guard.verify()
+        return nxt
 
     def _with_pos(self):
         cache = dict(self.cache)
@@ -112,6 +126,8 @@ class ServeEngine:
         # already-advanced positions (a real race seen as shifted decode
         # outputs under load)
         cache["pos"] = jnp.array(self._pos)
+        if self._guard is not None:
+            self._guard.capture("pos", self._pos, cache["pos"])
         return cache
 
     def step(self) -> list[Request]:
@@ -128,6 +144,8 @@ class ServeEngine:
         )
         self.cache = cache
         nxt = np.asarray(logits[:, 0].argmax(axis=-1))
+        if self._guard is not None:  # sync point: dispatch completed above
+            self._guard.verify()
         finished = []
         for i in active:
             req = self.slots[i]

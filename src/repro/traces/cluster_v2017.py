@@ -105,7 +105,7 @@ class ClusterTraceConfig:
 
 def resolve_trace_path(path: str | None = None) -> str | None:
     """The CSV path to use: explicit argument, else the env var, else None."""
-    return path if path is not None else os.environ.get(ENV_VAR)
+    return path if path is not None else os.environ.get(ENV_VAR)  # reprolint: disable=R002 trace CSV location, not a backend choice; resolved per call, nothing cached
 
 
 def trace_available(path: str | None = None) -> bool:

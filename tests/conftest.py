@@ -5,6 +5,24 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize",
+        action="store_true",
+        default=False,
+        help="arm the runtime sanitizers (repro.analysis.runtime) "
+        "process-wide: every ServeEngine/ControlPlane behaves as if "
+        "debug=True — buffer-aliasing guard + event-heap checks",
+    )
+
+
+def pytest_configure(config):
+    if config.getoption("--sanitize"):
+        from repro.analysis import runtime as sanitizers
+
+        sanitizers.enable()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

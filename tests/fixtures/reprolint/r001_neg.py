@@ -1,0 +1,31 @@
+"""R001 negative: the PR 5 fix (copy at handoff) plus benign asarray.
+
+``jnp.array`` copies, so the in-place advance cannot leak into the
+dispatched computation; ``jnp.asarray`` of a buffer that is only ever
+*rebound* (never mutated in place) is also fine.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ServeEngine:
+    def __init__(self, batch_slots):
+        self._pos = np.zeros(batch_slots, np.int32)
+        self._prompt = np.zeros(8, np.int32)
+        self._decode = jax.jit(lambda tokens, pos: tokens + pos)
+
+    def _with_pos(self):
+        return jnp.array(self._pos)  # copies — safe to mutate after
+
+    def step(self, tokens):
+        logits = self._decode(tokens, self._with_pos())
+        self._pos += 1
+        return logits
+
+    def set_prompt(self, prompt):
+        self._prompt = np.asarray(prompt)  # rebinding, not in-place
+
+    def prompt_device(self):
+        return jnp.asarray(self._prompt)  # never mutated in place: ok

@@ -1,0 +1,31 @@
+"""R001 positive: the distilled PR 5 ``ServeEngine._with_pos`` race.
+
+``jnp.asarray(self._pos)`` zero-copies the live host buffer into the
+jitted decode step while ``step``/``_step_single`` advance ``self._pos``
+in place — under async dispatch the computation reads already-advanced
+positions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ServeEngine:
+    def __init__(self, batch_slots):
+        self._pos = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(lambda tokens, pos: tokens + pos)
+
+    def _with_pos(self):
+        # BUG: zero-copy alias of a buffer mutated in place below
+        return jnp.asarray(self._pos)
+
+    def step(self, tokens):
+        logits = self._decode(tokens, self._with_pos())
+        self._pos += 1  # in-place advance races the async dispatch
+        return logits
+
+    def _step_single(self, slot, tokens):
+        logits = self._decode(tokens, self._with_pos())
+        self._pos[slot] += 1
+        return logits

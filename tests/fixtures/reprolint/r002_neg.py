@@ -1,0 +1,15 @@
+"""R002 negative: backend choice routed through repro.backend."""
+
+from repro.backend import resolve, set_backend
+
+
+def pick_waterlevel_backend(explicit=None):
+    return resolve("waterlevel", explicit)
+
+
+def run_both(fn):
+    with set_backend(rd="host"):
+        host = fn()
+    with set_backend(rd="jnp"):
+        dev = fn()
+    return host, dev

@@ -1,0 +1,13 @@
+"""R002 positive: ad-hoc backend-choice env reads outside repro.backend."""
+
+import os
+
+BACKEND = os.environ.get("REPRO_RD_BACKEND", "auto")  # import-time read
+
+
+def pick_waterlevel_backend():
+    return os.getenv("REPRO_WATERLEVEL_BACKEND", "auto")
+
+
+def force(kind, value):
+    os.environ["REPRO_" + kind.upper() + "_BACKEND"] = value

@@ -1,0 +1,17 @@
+"""R003 negative: syncs on the host side only; jitted fns stay pure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def clean_step(x):
+    return jnp.tanh(x) * jnp.asarray([2.0])  # jnp.asarray is fine in jit
+
+
+def host_driver(x):
+    # not jitted: sync points are exactly where they belong
+    out = clean_step(x)
+    out.block_until_ready()
+    return float(np.asarray(out).sum()), out.sum().item()

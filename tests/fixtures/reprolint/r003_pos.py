@@ -1,0 +1,29 @@
+"""R003 positive: host syncs inside jitted hot paths (all four forms)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def decorated_step(x):
+    total = float(x.sum())  # host sync: concretizes a traced value
+    host = np.asarray(x)  # host sync: device->host transfer under jit
+    return x * total + host.shape[0]
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def partial_jitted(n, x):
+    return x + x.sum().item()  # host sync: .item() under jit
+
+
+def wrapped(x):
+    x.block_until_ready()  # host sync in a fn handed to jax.jit below
+    return jnp.tanh(x)
+
+
+wrapped_jit = jax.jit(wrapped)
+
+lambda_jit = jax.jit(lambda x: x * x.sum().item())  # sync in jitted lambda

@@ -1,0 +1,17 @@
+"""R004 negative: sorted set iteration and owned, seeded RNG streams."""
+
+import random
+
+import numpy as np
+
+
+def assign(eligible_list, seed):
+    eligible = set(eligible_list)
+    order = []
+    for server in sorted(eligible):  # deterministic order
+        order.append(server)
+    picks = [m for m in sorted({1, 2, 3})]
+    rng = np.random.default_rng(seed)  # owned + seeded
+    own = random.Random(seed)  # owned + seeded
+    gen = np.random.Generator(np.random.PCG64(seed))
+    return order, picks, rng.uniform(), own.random(), gen.uniform()

@@ -1,0 +1,18 @@
+"""R004 positive: set-ordered iteration and global/unseeded RNG."""
+
+import random
+
+import numpy as np
+
+
+def assign(eligible_list):
+    eligible = set(eligible_list)
+    order = []
+    for server in eligible:  # nondeterministic order feeds the schedule
+        order.append(server)
+    picks = [m for m in {1, 2, 3}]  # set-literal comprehension iteration
+    jitter = random.random()  # shared global RNG
+    rng = np.random.default_rng()  # unseeded
+    noise = np.random.uniform()  # numpy global RNG
+    shuffled = random.sample(order, len(order))
+    return order, picks, jitter, rng, noise, shuffled

@@ -1,0 +1,16 @@
+"""R005 negative: busy-time mutations through ClusterState helpers."""
+
+
+class PolitePolicy:
+    def __init__(self, cluster):
+        self.cluster = cluster
+
+    def assign(self, machine, tasks):
+        self.cluster.enqueue(machine, tasks)  # the sanctioned delta path
+
+    def read(self):
+        return self.cluster.busy()  # reads are always fine
+
+
+def drain(cluster, t):
+    cluster.process_slot(t)

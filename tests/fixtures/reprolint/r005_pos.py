@@ -1,0 +1,14 @@
+"""R005 positive: eq. 2 busy-time state written outside ClusterState."""
+
+
+class SneakyPolicy:
+    def __init__(self, cluster):
+        self.cluster = cluster
+
+    def assign(self, machine, finish_slot):
+        self.cluster._busy[machine] = finish_slot  # bypasses delta helpers
+        self.cluster._busy_stale = True  # pokes the cache flag directly
+
+
+def drain(cluster, machine):
+    cluster._busy[machine] -= 1  # aug-assign bypass

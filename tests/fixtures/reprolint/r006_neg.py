@@ -1,0 +1,20 @@
+"""R006 negative: registrations through repro.registry, reads anywhere."""
+
+from repro import registry
+from repro.core import ALGORITHMS
+
+
+def my_policy(prob):
+    return None
+
+
+def install():
+    registry.register("algorithm", "mine", my_policy)
+
+
+def lookup(name):
+    return ALGORITHMS[name]  # reads of the live view are fine
+
+
+def enumerate_policies():
+    return sorted(ALGORITHMS)

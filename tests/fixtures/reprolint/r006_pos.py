@@ -1,0 +1,15 @@
+"""R006 positive: registry-dict writes bypassing repro.registry."""
+
+from repro import registry
+from repro.core import ALGORITHMS, BATCH_ALGORITHMS
+
+
+def my_policy(prob):
+    return None
+
+
+def install():
+    ALGORITHMS["mine"] = my_policy  # skips the duplicate-name check
+    BATCH_ALGORITHMS.update(mine=my_policy)  # mutator bypass
+    ALGORITHMS.pop("wf")  # removal bypass
+    registry.kind_dict("trace")["mine"] = my_policy  # kind_dict bypass

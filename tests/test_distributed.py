@@ -25,7 +25,7 @@ def _run(body: str) -> str:
         capture_output=True,
         text=True,
         timeout=420,
-        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},  # reprolint: disable=R002 passthrough to a subprocess, no backend choice read
     )
     assert proc.returncode == 0, proc.stderr[-4000:]
     return proc.stdout

@@ -433,11 +433,13 @@ def test_scan_checkpoints_summarizes_root(tmp_path):
 
 
 @pytest.mark.slow
-def test_placement_churn_benchmark_runs_all_policies():
+def test_placement_churn_benchmark_runs_all_policies(tmp_path):
     from benchmarks.policy_matrix import run_placement_churn
 
     rows = run_placement_churn(
-        smoke=True, cadences=(0, 8), out_csv="placement_churn_test.csv"
+        smoke=True,
+        cadences=(0, 8),
+        out_csv=str(tmp_path / "placement_churn_test.csv"),
     )
     assert {r["repl_policy"] for r in rows} == set(list_replication_policies())
     assert all(r["makespan"] > 0 for r in rows)

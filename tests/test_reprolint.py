@@ -1,0 +1,216 @@
+"""reprolint self-tests: fixture corpus, pragmas, baseline, repo gate.
+
+Every rule must fire on its ``rNNN_pos.py`` fixture and stay silent on
+its ``rNNN_neg.py`` twin (the corpus under ``tests/fixtures/reprolint``
+is parsed, never imported).  The final test runs the real CI gate —
+``lint_paths(["src", "tests", "benchmarks"])`` under the checked-in
+config — so a regression anywhere in the repo fails tier-1 before it
+ever reaches the CI lint job.
+
+These tests import only ``repro.analysis`` (stdlib-only); they run in
+environments without jax/numpy installed.
+"""
+
+import pathlib
+
+import pytest
+
+from repro.analysis import (
+    LintConfig,
+    lint_file,
+    lint_paths,
+    load_config,
+    main,
+    rule_ids,
+)
+from repro.analysis.linter import CONFIG_NAME, _module_name
+from repro.analysis.rules import RULES
+
+FIXTURES = pathlib.Path(__file__).resolve().parent / "fixtures" / "reprolint"
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+ALL_RULES = rule_ids()
+
+
+def _lint_fixture(name: str, rule: str):
+    path = FIXTURES / name
+    rel = path.relative_to(REPO_ROOT).as_posix()
+    return lint_file(rel, path.read_text(), LintConfig(), select=(rule,))
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_rule_fires_on_positive_fixture(rule):
+    result = _lint_fixture(f"{rule.lower()}_pos.py", rule)
+    assert not result.errors
+    hits = [v for v in result.violations if v.rule == rule]
+    assert hits, f"{rule} did not fire on its positive fixture"
+    for v in hits:
+        assert v.rule == rule
+        assert v.line > 0
+        assert rule in v.render()
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_rule_silent_on_negative_fixture(rule):
+    result = _lint_fixture(f"{rule.lower()}_neg.py", rule)
+    assert not result.errors
+    assert result.violations == [], (
+        f"{rule} false-positived on its negative fixture: "
+        + "; ".join(v.render() for v in result.violations)
+    )
+
+
+def test_negative_fixtures_clean_under_every_rule():
+    """Negatives are clean across the whole rule set, not just their own
+    rule — the corpus doubles as a false-positive regression suite."""
+    for rule in ALL_RULES:
+        path = FIXTURES / f"{rule.lower()}_neg.py"
+        rel = path.relative_to(REPO_ROOT).as_posix()
+        result = lint_file(rel, path.read_text(), LintConfig())
+        assert result.violations == [], (
+            f"{path.name}: " + "; ".join(v.render() for v in result.violations)
+        )
+
+
+def test_r001_positive_is_the_pr5_bug_shape():
+    """The R001 fixture must reproduce the incident class: asarray of a
+    buffer that the same class advances in place."""
+    result = _lint_fixture("r001_pos.py", "R001")
+    assert len(result.violations) == 1
+    v = result.violations[0]
+    assert "_pos" in v.message and "jnp.array" in v.message
+
+
+def test_rule_metadata_complete():
+    ids = [r.id for r in RULES]
+    assert ids == sorted(ids) and len(set(ids)) == len(ids)
+    for r in RULES:
+        assert r.title and r.rationale, f"{r.id} missing title/rationale"
+
+
+# -- pragmas ---------------------------------------------------------------
+
+
+def test_pragma_with_reason_suppresses():
+    src = (
+        "import os\n"
+        "X = os.getenv('REPRO_X')  # reprolint: disable=R002 subprocess passthrough\n"
+    )
+    result = lint_file("src/repro/x.py", src, LintConfig())
+    assert result.violations == []
+    assert result.suppressed == 1
+
+
+def test_pragma_without_reason_does_not_suppress():
+    src = "import os\nX = os.getenv('REPRO_X')  # reprolint: disable=R002\n"
+    result = lint_file("src/repro/x.py", src, LintConfig())
+    assert len(result.violations) == 1
+    assert "pragma ignored" in result.violations[0].message
+
+
+def test_pragma_for_other_rule_does_not_suppress():
+    src = "import os\nX = os.getenv('REPRO_X')  # reprolint: disable=R001 nope\n"
+    result = lint_file("src/repro/x.py", src, LintConfig())
+    assert len(result.violations) == 1
+    assert result.suppressed == 0
+
+
+def test_pragma_multiple_rules():
+    src = (
+        "import os\n"
+        "X = os.getenv('REPRO_X')  # reprolint: disable=R001,R002 both listed\n"
+    )
+    result = lint_file("src/repro/x.py", src, LintConfig())
+    assert result.violations == []
+
+
+# -- baseline / config ------------------------------------------------------
+
+
+def test_baseline_suppresses_by_glob_and_line():
+    src = "import os\nX = os.getenv('REPRO_X')\n"
+    cfg = LintConfig(baseline=("src/repro/legacy/*.py::R002",))
+    result = lint_file("src/repro/legacy/old.py", src, cfg)
+    assert result.violations == [] and result.baselined == 1
+    # line-pinned entry: only that line
+    cfg = LintConfig(baseline=("src/repro/legacy/old.py::R002::2",))
+    assert lint_file("src/repro/legacy/old.py", src, cfg).violations == []
+    cfg = LintConfig(baseline=("src/repro/legacy/old.py::R002::99",))
+    assert len(lint_file("src/repro/legacy/old.py", src, cfg).violations) == 1
+
+
+def test_checked_in_config_loads_and_excludes_fixtures():
+    cfg = load_config(str(REPO_ROOT / CONFIG_NAME))
+    assert cfg.excludes("tests/fixtures/reprolint/r001_pos.py")
+    assert not cfg.excludes("tests/test_reprolint.py")
+    assert cfg.baseline == (), (
+        "the baseline is for transitional debt only and must stay empty; "
+        "suppress new hits with an inline pragma + reason"
+    )
+
+
+def test_module_name_mapping():
+    assert _module_name("src/repro/backend.py") == "repro.backend"
+    assert _module_name("src/repro/analysis/__init__.py") == "repro.analysis"
+    assert _module_name("tests/test_core.py") == "tests.test_core"
+
+
+def test_syntax_error_reported_not_raised():
+    result = lint_file("src/bad.py", "def broken(:\n", LintConfig())
+    assert result.errors and not result.violations
+
+
+# -- the real gate ----------------------------------------------------------
+
+
+def test_repo_is_lint_clean():
+    """The CI gate, run as a tier-1 test: src/tests/benchmarks lint clean
+    under the checked-in config."""
+    cfg = load_config(str(REPO_ROOT / CONFIG_NAME))
+    result = lint_paths(
+        ["src", "tests", "benchmarks"], cfg, root=str(REPO_ROOT)
+    )
+    assert not result.errors, "\n".join(result.errors)
+    assert result.violations == [], "\n".join(
+        v.render() for v in result.violations
+    )
+    assert result.files > 100  # sanity: the walk actually found the repo
+
+
+def test_cli_clean_run_and_list_rules(capsys):
+    import os
+
+    cwd = os.getcwd()
+    os.chdir(REPO_ROOT)
+    try:
+        assert main(["src/repro/analysis"]) == 0
+        out = capsys.readouterr().out
+        assert "reprolint: clean" in out
+        assert main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rule in ALL_RULES:
+            assert rule in out
+    finally:
+        os.chdir(cwd)
+
+
+def test_cli_reports_fixture_violations(capsys, tmp_path):
+    import os
+
+    # an empty config (no excludes) so the fixture corpus is linted
+    cfg = tmp_path / "empty.cfg"
+    cfg.write_text("[reprolint]\n")
+    rel = (FIXTURES / "r002_pos.py").relative_to(REPO_ROOT).as_posix()
+    cwd = os.getcwd()
+    os.chdir(REPO_ROOT)
+    try:
+        assert main([rel, "--config", str(cfg)]) == 1
+    finally:
+        os.chdir(cwd)
+    out = capsys.readouterr().out
+    assert "R002" in out and "violation(s)" in out
+
+
+def test_cli_select_unknown_rule_errors():
+    with pytest.raises(SystemExit):
+        main(["src", "--select", "R999"])

@@ -332,9 +332,7 @@ def run_rd_sweep(
     for m in ms:
         prob = _rd_instance(rng, m, n_tasks)
         host, host_us = timed(lambda: replica_deletion(prob), warmup=False)
-        dev, jnp_us = timed(
-            lambda: replica_deletion_jax(prob, backend="jnp")
-        )
+        dev, jnp_us = timed(lambda: replica_deletion_jax(prob))
         if dev.alloc != host.alloc:
             raise AssertionError(f"rd sweep: jnp != host at M={m}")
         row = {
@@ -346,7 +344,7 @@ def run_rd_sweep(
         }
         if on_tpu:
             pal, pallas_us = timed(
-                lambda: replica_deletion_jax(prob, backend="pallas")
+                lambda: replica_deletion_jax(prob, backend="pallas")  # reprolint: disable=R007 sweep measures the kernel strip explicitly
             )
             if pal.alloc != host.alloc:
                 raise AssertionError(f"rd sweep: pallas != host at M={m}")
@@ -364,7 +362,7 @@ def run_rd_sweep(
         prob = _rd_instance(rng, ms[0], tiny_tasks, k_groups=3)
         host = replica_deletion(prob)
         pal, pallas_us = timed(
-            lambda: replica_deletion_jax(prob, backend="pallas")
+            lambda: replica_deletion_jax(prob, backend="pallas")  # reprolint: disable=R007 sweep measures the kernel strip explicitly
         )
         if pal.alloc != host.alloc:
             raise AssertionError("rd sweep: pallas(interpret) != host")

@@ -8,12 +8,20 @@ helpers, deterministic iteration wherever order feeds a schedule, and no
 host/device buffer aliasing into async dispatch.  This package enforces
 them with tooling instead of review vigilance:
 
-- :mod:`repro.analysis.rules` — the AST rule set (R001–R006), one
+- :mod:`repro.analysis.rules` — the AST rule set (R001–R007), one
   visitor per invariant;
 - :mod:`repro.analysis.linter` — the driver behind
   ``python -m repro.analysis src tests benchmarks`` (pragmas, baseline,
   exit code — the CI gate);
-- :mod:`repro.analysis.runtime` — the dynamic complement for what AST
+- :mod:`repro.analysis.contracts` — the geometry-contract registry:
+  device entry points declare their admissible lattice, VMEM blocks,
+  overflow envelopes, and jit-cache signatures via
+  :func:`repro.analysis.contracts.contract`;
+- :mod:`repro.analysis.kernelcheck` — the abstract-interpretation
+  verifier behind ``python -m repro.analysis.kernelcheck``: sweeps each
+  contract's boundary lattice and proves memory / range / coverage /
+  recompile-surface properties via ``jax.eval_shape``, no device needed;
+- :mod:`repro.analysis.runtime` — the dynamic complement for what static
   analysis can't prove: buffer-aliasing guards on jitted entrypoints
   and the event-heap ordering check, active under
   ``SchedulingEngine(debug=True)`` / ``ServeEngine(debug=True)`` or
@@ -24,14 +32,21 @@ lint CI job, which installs no jax), so heavyweight imports stay inside
 functions.
 """
 
+from .contracts import CONTRACTS, Axis, Interval, KernelContract, RangeClaim, contract
 from .linter import LintConfig, LintResult, lint_file, lint_paths, load_config, main
 from .rules import RULES, Violation, rule_ids
 
 __all__ = [
+    "Axis",
+    "CONTRACTS",
+    "Interval",
+    "KernelContract",
     "LintConfig",
     "LintResult",
     "RULES",
+    "RangeClaim",
     "Violation",
+    "contract",
     "lint_file",
     "lint_paths",
     "load_config",

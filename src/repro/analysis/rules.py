@@ -208,8 +208,8 @@ class R002EnvOutsideBackend(Rule):
         "Backend choice must flow through repro.backend.resolve/"
         "set_backend: ad-hoc env reads resolve at import or call time and "
         "go stale against jit caches (and env writes in benchmarks leak "
-        "state across cells). The one warn-and-delegate shim lives in "
-        "repro.backend."
+        "state across cells). repro.backend is the sole configuration "
+        "point (its legacy env shim is deleted)."
     )
 
     _ALLOWED_MODULES = {"repro.backend"}
@@ -579,6 +579,57 @@ class R006RegistryBypass(Rule):
         self.generic_visit(node)
 
 
+# ---------------------------------------------------------------------------
+# R007 — per-call backend choice outside the resolution layer
+# ---------------------------------------------------------------------------
+
+
+class R007PerCallBackendChoice(Rule):
+    id = "R007"
+    title = "per-call use_pallas=/backend= literal outside the resolution layer"
+    rationale = (
+        "The backend satellite centralised backend choice in "
+        "repro.backend: a literal use_pallas=/backend= at a call site "
+        "bypasses set_backend scopes and silently pins a path after the "
+        "dispatch policy changes. Scope the choice with "
+        "repro.backend.set_backend(...); pragma only deliberate "
+        "device-layer pins (parity twins, resolution-precedence tests)."
+    )
+
+    # the resolution layer itself: repro.backend plus the adapters/kernels
+    # that implement the explicit-beats-scope contract
+    _ALLOWED_MODULES = {
+        "repro.backend",
+        "repro.core.rd",
+        "repro.core.rd_jax",
+        "repro.core.wf_jax",
+    }
+    _ALLOWED_PREFIXES = ("repro.kernels.",)
+    _KEYWORDS = {"use_pallas", "backend"}
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        if self.ctx.module in self._ALLOWED_MODULES or self.ctx.module.startswith(
+            self._ALLOWED_PREFIXES
+        ):
+            return []
+        return super().check(tree)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        for kw in node.keywords:
+            if (
+                kw.arg in self._KEYWORDS
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is not None
+            ):
+                self.report(
+                    kw.value,
+                    f"per-call {kw.arg}={kw.value.value!r} pins a backend at "
+                    f"the call site — scope the choice with "
+                    f"repro.backend.set_backend(...) instead",
+                )
+        self.generic_visit(node)
+
+
 RULES: tuple[type[Rule], ...] = (
     R001AliasedMutableBuffer,
     R002EnvOutsideBackend,
@@ -586,6 +637,7 @@ RULES: tuple[type[Rule], ...] = (
     R004NondeterministicOrder,
     R005BusyStateWrite,
     R006RegistryBypass,
+    R007PerCallBackendChoice,
 )
 
 

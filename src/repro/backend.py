@@ -1,19 +1,16 @@
 """One config object for every numeric-backend choice.
 
-Backend selection used to be spread over three ad-hoc surfaces: the
-``REPRO_WATERLEVEL_BACKEND`` and ``REPRO_RD_BACKEND`` environment
-variables plus per-call ``use_pallas`` flags.  This module is now the
+Backend selection used to be spread over ad-hoc surfaces (environment
+variables plus per-call ``use_pallas`` flags).  This module is now the
 single resolution point:
 
 - :func:`resolve(kind)` returns the configured backend for ``kind``
   (``"waterlevel"`` → ``auto|pallas|jnp``, ``"rd"`` →
   ``auto|host|jnp|pallas``);
 - :func:`set_backend` is a context manager that scopes an explicit
-  choice (``with set_backend(rd="jnp"): ...``) — it nests, restores on
-  exit, and beats the environment;
-- the legacy env vars keep working through a deprecation shim: they are
-  consulted only when no :func:`set_backend` scope is active, and each
-  read warns :class:`DeprecationWarning` once per process.
+  choice (``with set_backend(rd="jnp"): ...``) — it nests and restores
+  on exit.  It is the only process-wide override; the legacy
+  ``REPRO_{KIND}_BACKEND`` env vars are gone.
 
 ``auto`` is returned verbatim — platform-dependent auto-dispatch (TPU →
 device, CPU → host/jnp) stays with the consumer
@@ -28,25 +25,21 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import os
-import warnings
 from typing import Iterator
 
 __all__ = ["BACKEND_KINDS", "BackendConfig", "current", "resolve", "set_backend"]
 
-# kind -> (env var shim, valid choices)
-BACKEND_KINDS: dict[str, tuple[str, tuple[str, ...]]] = {
-    "waterlevel": ("REPRO_WATERLEVEL_BACKEND", ("auto", "pallas", "jnp")),
-    "rd": ("REPRO_RD_BACKEND", ("auto", "host", "jnp", "pallas")),
+# kind -> valid choices
+BACKEND_KINDS: dict[str, tuple[str, ...]] = {
+    "waterlevel": ("auto", "pallas", "jnp"),
+    "rd": ("auto", "host", "jnp", "pallas"),
 }
-
-_warned_env: set[str] = set()
 
 
 @dataclasses.dataclass(frozen=True)
 class BackendConfig:
     """Explicit backend choices; ``None`` means "not set here" (fall
-    through to the env shim, then ``auto``)."""
+    through to ``auto``)."""
 
     waterlevel: str | None = None
     rd: str | None = None
@@ -60,7 +53,7 @@ class BackendConfig:
 
 def _check(kind: str, choice: str, *, source: str) -> str:
     try:
-        _, valid = BACKEND_KINDS[kind]
+        valid = BACKEND_KINDS[kind]
     except KeyError:
         raise KeyError(
             f"unknown backend kind {kind!r}; known: {sorted(BACKEND_KINDS)}"
@@ -83,7 +76,7 @@ def current() -> BackendConfig:
 
 def resolve(kind: str, explicit: str | None = None) -> str:
     """The backend for ``kind``: explicit argument > :func:`set_backend`
-    scope > legacy env var (deprecated) > ``"auto"``.
+    scope > ``"auto"``.
 
     ``auto`` is returned as-is; mapping it to a concrete backend is the
     consumer's job (it may need the jax platform, which this module
@@ -91,22 +84,9 @@ def resolve(kind: str, explicit: str | None = None) -> str:
     """
     if explicit is not None:
         return _check(kind, explicit, source="explicit backend")
-    env_var, _ = BACKEND_KINDS[_check_kind(kind)]
-    configured = getattr(current(), kind)
+    configured = getattr(current(), _check_kind(kind))
     if configured is not None:
         return configured
-    env = os.environ.get(env_var)
-    if env is not None:
-        if env_var not in _warned_env:
-            _warned_env.add(env_var)
-            warnings.warn(
-                f"{env_var} is deprecated; use "
-                f"repro.backend.set_backend({kind}={env!r}) instead "
-                f"(the env var keeps working for now)",
-                DeprecationWarning,
-                stacklevel=3,
-            )
-        return _check(kind, env, source=env_var)
     return "auto"
 
 

@@ -84,8 +84,8 @@ def resolve_rd_backend(explicit: str | None = None) -> str:
     """Decide the RD backend: ``host`` | ``jnp`` | ``pallas``.
 
     ``explicit`` wins when given; otherwise the choice comes from
-    :func:`repro.backend.resolve` (``set_backend(rd=...)`` scopes, then
-    the deprecated ``REPRO_RD_BACKEND`` env shim), with ``auto`` choosing
+    :func:`repro.backend.resolve` (``set_backend(rd=...)`` scopes,
+    falling back to ``auto``), with ``auto`` choosing
     the fused Pallas strip kernel on TPU and this module's
     class-compressed host path elsewhere (on CPU the device formulation
     only runs the kernel in interpret mode, and the host path is the

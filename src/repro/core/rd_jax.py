@@ -62,7 +62,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .instance import Assignment, AssignmentProblem
+from repro.analysis.contracts import Interval, RangeClaim, choice, contract, span
+
+from .instance import Assignment, AssignmentProblem, TaskGroup
 from .rd import RD_DEVICE_MAX_M, replica_deletion
 
 __all__ = [
@@ -526,6 +528,145 @@ def _resolve_device(backend: str, c_cap: int, a_pad: int) -> tuple[bool, bool]:
     return use_pallas, interpret
 
 
+# ---------------------------------------------------------------------------
+# kernelcheck geometry contract (verified by repro.analysis.kernelcheck).
+#
+# Admissible input envelope for the int32 range proofs: pre-burst busy
+# times, per-job task totals and μ are bounded far above paper scale
+# (Sec. V uses μ ≤ 4, thousands of tasks); within it every packed key,
+# prefix sum and eq. 2 carry provably fits int32, and the sole-copy
+# ``_BIG`` alt sentinel stays strictly above every real busy estimate.
+
+RD_ENV_BUSY0_MAX = 1 << 20  # pre-burst busy time per server
+RD_ENV_TASKS_MAX = 1 << 20  # tasks per job
+RD_ENV_MU_MAX = 1 << 4  # per-server tasks/slot (μ)
+RD_ENV_CHAIN_JOBS_MAX = 64  # jobs per chained same-slot burst
+
+
+@functools.lru_cache(maxsize=None)
+def _rd_abstract_geometry(m: int, k: int, a: int, s: int) -> tuple[int, int]:
+    """(c_cap, a_pad) for the representative instance of a lattice point,
+    computed through the *real* sizing path (:func:`rd_slot_capacity`)."""
+    a_eff = min(a, m)
+    servers = tuple(range(a_eff))
+    problem = AssignmentProblem(
+        busy=np.zeros(m, np.int64),
+        mu=np.ones(m, np.int64),
+        groups=tuple(TaskGroup(s, servers) for _ in range(k)),
+    )
+    return rd_slot_capacity(problem), _next_pow2(max(2, a_eff))
+
+
+def _rd_dispatch(geom: dict) -> str:
+    if geom["requested"] == "host" or geom["m"] > RD_DEVICE_MAX_M:
+        # explicit host request, or past the 15-bit packing ceiling: the
+        # auto dispatcher (repro.core.rd.replica_deletion_auto) routes
+        # these to host RD and replica_deletion_jax refuses them.
+        return "host"
+    c_cap, a_pad = _rd_abstract_geometry(
+        geom["m"], geom["k"], geom["a"], geom["s"]
+    )
+    use_pallas, _ = _resolve_device(geom["requested"], c_cap, a_pad)
+    return "pallas" if use_pallas else "jnp"
+
+
+def _rd_range_claims(geom: dict, *, chain_jobs: int = 1) -> list[RangeClaim]:
+    m = geom["m"]
+    server_id = Interval(0, m)  # holder ids, pad id = M
+    packed = (server_id << _PACK_BITS) | server_id
+    tasks = Interval(0, RD_ENV_TASKS_MAX)
+    busy0 = Interval(0, RD_ENV_BUSY0_MAX)
+    # eq. 2 carry: each admitted job raises a server's busy estimate by
+    # at most ⌈load/μ⌉ ≤ load ≤ its task total (members are homed at
+    # exactly one primary holder, so per-server loads sum to ≤ tasks)
+    busy_est = busy0 + Interval(0, chain_jobs) * tasks
+    return [
+        RangeClaim(
+            "holder id field (pad id = M)", server_id, bits=_PACK_BITS
+        ),
+        RangeClaim("packed setkey word ((id << 15) | id)", packed, bits=30),
+        RangeClaim("per-server load scatter", tasks),
+        RangeClaim("strip quota ((load-1) mod μ + 1)", Interval(1, RD_ENV_MU_MAX)),
+        RangeClaim("eq. 2 busy estimate", busy_est),
+        RangeClaim(
+            "sole-copy alt sentinel headroom (_BIG − busy_est)",
+            Interval.const(_BIG) - busy_est,
+            positive=True,
+        ),
+    ]
+
+
+def _rd_signature(geom: dict) -> tuple:
+    c_cap, a_pad = _rd_abstract_geometry(
+        geom["m"], geom["k"], geom["a"], geom["s"]
+    )
+    sig = ("rd-device", geom["m"], c_cap, a_pad)
+    if "b" in geom:
+        sig += (_next_pow2(geom["b"]),)
+    return sig
+
+
+def _rd_abstract(geom: dict):
+    c_cap, a_pad = _rd_abstract_geometry(
+        geom["m"], geom["k"], geom["a"], geom["s"]
+    )
+    m = geom["m"]
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    use_pallas = _rd_dispatch(geom) == "pallas"
+    if "b" in geom:
+        b_pad = _next_pow2(geom["b"])
+        fn = functools.partial(
+            _rd_device_chain, use_pallas=use_pallas, interpret=True
+        )
+        return fn, (
+            sd((m,), i32),
+            sd((b_pad, m), i32),
+            sd((b_pad, c_cap, a_pad), i32),
+            sd((b_pad, c_cap), i32),
+            sd((b_pad, c_cap), i32),
+            sd((b_pad, c_cap), i32),
+            sd((b_pad,), i32),
+        )
+    fn = functools.partial(_rd_device, use_pallas=use_pallas, interpret=True)
+    return fn, (
+        sd((m,), i32),
+        sd((m,), i32),
+        sd((c_cap, a_pad), i32),
+        sd((c_cap,), i32),
+        sd((c_cap,), i32),
+        sd((c_cap,), i32),
+        sd((), i32),
+    )
+
+
+@contract(
+    "rd_jax.device",
+    axes=(
+        span(
+            "m",
+            2,
+            RD_DEVICE_MAX_M,
+            boundaries=(_MIN_LANES, RD_DEVICE_MAX_M),
+            past=(RD_DEVICE_MAX_M + 1, 1 << 16),
+        ),
+        choice("k", 1, 4, 64, 256),
+        choice("a", 2, 4, 8, 16),
+        choice("s", 1, 32),
+        choice("requested", "host", "jnp", "pallas"),
+    ),
+    backends=("host", "jnp", "pallas"),
+    device_backends=("jnp", "pallas"),
+    dispatch=_rd_dispatch,
+    ranges=_rd_range_claims,
+    signature=_rd_signature,
+    max_signatures=256,  # m lattice points × pow2 (c_cap, a_pad) classes
+    abstract=_rd_abstract,
+    eval_points=2,  # tracing the deletion/dedup while_loops is costly
+    notes="single-instance device RD; n_servers past RD_DEVICE_MAX_M "
+    "must route to host (15-bit packed sort keys), slot-capacity "
+    "overflow re-runs on host at runtime",
+)
 def replica_deletion_jax(
     problem: AssignmentProblem, seed: int = 0, *, backend: str = "jnp"
 ) -> Assignment:
@@ -576,6 +717,34 @@ def replica_deletion_jax(
     )
 
 
+@contract(
+    "rd_jax.chain",
+    axes=(
+        span(
+            "m",
+            2,
+            RD_DEVICE_MAX_M,
+            boundaries=(RD_DEVICE_MAX_M,),
+            past=(1 << 16,),
+        ),
+        choice("k", 1, 64),
+        choice("a", 2, 16),
+        choice("s", 1, 32),
+        choice("b", 1, 2, 7, 32, RD_ENV_CHAIN_JOBS_MAX),
+        choice("requested", "host", "jnp", "pallas"),
+    ),
+    backends=("host", "jnp", "pallas"),
+    device_backends=("jnp", "pallas"),
+    dispatch=_rd_dispatch,
+    ranges=lambda geom: _rd_range_claims(geom, chain_jobs=geom["b"]),
+    signature=_rd_signature,
+    max_signatures=256,  # × pow2 burst-length classes
+    abstract=_rd_abstract,
+    eval_points=2,
+    notes="chained same-slot RD burst (scan over jobs, eq. 2 committed "
+    "between iterations); overflow of any job falls the whole burst "
+    "back to the host commit walk",
+)
 def replica_deletion_jax_chain(
     problems: list[AssignmentProblem], *, backend: str = "jnp"
 ) -> list[Assignment]:

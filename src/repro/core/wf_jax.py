@@ -22,9 +22,13 @@ are bit-identical by construction, which the parity suite asserts.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis.contracts import choice, contract, span
 
 from .instance import Assignment, AssignmentProblem
 
@@ -58,6 +62,111 @@ def _resolve_pallas(use_pallas: bool | None, m: int) -> bool:
     from repro.kernels.waterlevel import resolve_use_pallas
 
     return resolve_use_pallas(use_pallas, m)
+
+
+# ---------------------------------------------------------------------------
+# kernelcheck geometry contract (verified by repro.analysis.kernelcheck).
+#
+# Mirrors of repro.kernels.waterlevel.{PALLAS_MAX_M, WL_M_MAX} — literal
+# here so declaring the contract at import time does not force the
+# kernels import this module defers on purpose; kept in sync by
+# tests/test_kernelcheck.py.
+_PALLAS_MAX_M = 1 << 15
+_WL_M_MAX = 1 << 16
+
+
+def _wf_dispatch(geom: dict) -> str:
+    from repro import backend as backend_config
+
+    with backend_config.set_backend(waterlevel=geom["requested"]):
+        return "pallas" if _resolve_pallas(None, geom["m"]) else "jnp"
+
+
+def _wf_vmem(geom: dict):
+    from repro.kernels.waterlevel import wl_vmem_blocks
+
+    return wl_vmem_blocks(geom)
+
+
+def _wf_ranges(geom: dict) -> list:
+    """The kernel's claims (the jnp path shares its int32 arithmetic)
+    plus the adapter-level carry claims: evolved levels stay within the
+    busy envelope (eq. 10 max / eq. 2 commit) and the burst preserves the
+    kernel's Σ busy·μ precondition."""
+    from repro.analysis.contracts import Interval, RangeClaim
+    from repro.kernels.waterlevel import (
+        WL_BUSY0_MAX,
+        WL_LEVEL_MAX,
+        WL_MU_MAX,
+        WL_SUM_BMU_MAX,
+        WL_TOTAL_DEMAND_MAX,
+        wl_range_claims,
+    )
+
+    m = geom["m"]
+    claims = wl_range_claims(m)
+    claims.append(
+        RangeClaim(
+            "eq. 10 / eq. 2 busy carry (levels fed back as busy)",
+            Interval(0, WL_BUSY0_MAX + WL_TOTAL_DEMAND_MAX),
+            bound=WL_LEVEL_MAX,
+        )
+    )
+    claims.append(
+        RangeClaim(
+            "Σ busy·μ preserved across the burst (kernel precondition)",
+            Interval(
+                0,
+                WL_BUSY0_MAX * WL_MU_MAX * m
+                + WL_TOTAL_DEMAND_MAX
+                + m * WL_MU_MAX,
+            ),
+            bound=WL_SUM_BMU_MAX,
+        )
+    )
+    return claims
+
+
+def _wf_sig(geom: dict, kind: str) -> tuple:
+    up = _wf_dispatch(geom) == "pallas"
+    sig = (kind, geom["m"], _pad_k(geom["k"]), up)
+    if kind == "wf-chain":
+        sig += (_pad_k(geom["b"]),)
+    elif kind == "wf-batch":
+        sig += (geom["b"],)  # raw burst size — see the contract notes
+    return sig
+
+
+def _wf_abstract(geom: dict, kind: str):
+    m, k_pad = geom["m"], _pad_k(geom["k"])
+    up = _wf_dispatch(geom) == "pallas"
+    i32, b8 = jnp.int32, jnp.bool_
+    sd = jax.ShapeDtypeStruct
+    if kind == "wf-groups":
+        fn = functools.partial(_wf_groups_jit, use_pallas=up)
+        return fn, (
+            sd((m,), i32),
+            sd((m,), i32),
+            sd((k_pad, m), b8),
+            sd((k_pad,), i32),
+        )
+    if kind == "wf-batch":
+        b = geom["b"]
+        fn = functools.partial(_wf_batch_jit, use_pallas=up)
+        return fn, (
+            sd((b, m), i32),
+            sd((b, m), i32),
+            sd((b, k_pad, m), b8),
+            sd((b, k_pad), i32),
+        )
+    b_pad = _pad_k(geom["b"])
+    fn = functools.partial(_wf_chain_jit, use_pallas=up)
+    return fn, (
+        sd((m,), i32),
+        sd((b_pad, m), i32),
+        sd((b_pad, k_pad, m), b8),
+        sd((b_pad, k_pad), i32),
+    )
 
 
 def water_level(
@@ -358,6 +467,24 @@ def _to_assignment(
     return result
 
 
+@contract(
+    "wf_jax.groups",
+    axes=(
+        span("m", 1, _WL_M_MAX, boundaries=(128, _PALLAS_MAX_M)),
+        choice("k", 1, 3, 16, 128),
+        choice("requested", "jnp", "pallas"),
+    ),
+    backends=("jnp", "pallas"),
+    dispatch=_wf_dispatch,
+    vmem=_wf_vmem,
+    ranges=_wf_ranges,
+    signature=lambda geom: _wf_sig(geom, "wf-groups"),
+    max_signatures=64,  # m points × pow2 K classes × backend
+    abstract=lambda geom: _wf_abstract(geom, "wf-groups"),
+    eval_points=4,
+    notes="K-group scan adapter; widths past PALLAS_MAX_M are admissible "
+    "and route to the jnp pipeline (no past probes needed)",
+)
 def water_filling_jax(
     problem: AssignmentProblem, *, use_pallas: bool | None = None
 ) -> Assignment:
@@ -376,12 +503,32 @@ def water_filling_jax(
         jnp.asarray(busy[0]), jnp.asarray(mu[0]),
         jnp.asarray(masks[0]), jnp.asarray(demands[0]),
         # resolve before the jit boundary so the cache keys on the
-        # concrete backend (env overrides stay effective per call)
+        # concrete backend (set_backend scopes stay effective per call)
         use_pallas=_resolve_pallas(use_pallas, problem.n_servers),
     )
     return _to_assignment(problem, np.asarray(alloc), int(phi))
 
 
+@contract(
+    "wf_jax.batch",
+    axes=(
+        choice("m", 1, 128, 4096, _PALLAS_MAX_M, _WL_M_MAX),
+        choice("k", 1, 16),
+        choice("b", 1, 2, 7, 32),
+        choice("requested", "jnp", "pallas"),
+    ),
+    backends=("jnp", "pallas"),
+    dispatch=_wf_dispatch,
+    vmem=_wf_vmem,
+    ranges=_wf_ranges,
+    signature=lambda geom: _wf_sig(geom, "wf-batch"),
+    max_signatures=80,
+    abstract=lambda geom: _wf_abstract(geom, "wf-batch"),
+    eval_points=3,
+    notes="independent-problems batch; the burst size B enters the jit "
+    "cache unpadded (unlike the chain adapter) — callers with unbounded "
+    "burst-size diversity should chunk to fixed sizes",
+)
 def water_filling_jax_batch(
     problems: list[AssignmentProblem], *, use_pallas: bool | None = None
 ) -> list[Assignment]:
@@ -395,8 +542,8 @@ def water_filling_jax_batch(
 
     ``use_pallas`` picks the water-level backend (``None`` = auto: the
     batched-grid Pallas kernel on TPU, the vmapped jnp pipeline
-    elsewhere; ``REPRO_WATERLEVEL_BACKEND`` overrides) — assignments are
-    bit-identical either way.
+    elsewhere; ``set_backend(waterlevel=...)`` scopes override) —
+    assignments are bit-identical either way.
     """
     if not problems:
         return []
@@ -409,7 +556,7 @@ def water_filling_jax_batch(
         jnp.asarray(busy), jnp.asarray(mu), jnp.asarray(masks),
         jnp.asarray(demands),
         # resolve before the jit boundary so the cache keys on the
-        # concrete backend (env overrides stay effective per call)
+        # concrete backend (set_backend scopes stay effective per call)
         use_pallas=_resolve_pallas(use_pallas, m),
     )
     alloc = np.asarray(alloc)
@@ -419,6 +566,25 @@ def water_filling_jax_batch(
     ]
 
 
+@contract(
+    "wf_jax.chain",
+    axes=(
+        choice("m", 1, 128, _PALLAS_MAX_M, _WL_M_MAX),
+        choice("k", 1, 16),
+        choice("b", 1, 2, 7, 32, 64),
+        choice("requested", "jnp", "pallas"),
+    ),
+    backends=("jnp", "pallas"),
+    dispatch=_wf_dispatch,
+    vmem=_wf_vmem,
+    ranges=_wf_ranges,
+    signature=lambda geom: _wf_sig(geom, "wf-chain"),
+    max_signatures=96,  # m × pow2 K classes × pow2 B classes × backend
+    abstract=lambda geom: _wf_abstract(geom, "wf-chain"),
+    eval_points=3,
+    notes="same-slot burst chain (eq. 2 committed between jobs in the "
+    "scan); both K and B are pow2-padded before the jit boundary",
+)
 def water_filling_jax_chain(
     problems: list[AssignmentProblem], *, use_pallas: bool | None = None
 ) -> list[Assignment]:

@@ -28,11 +28,14 @@ permutation and applies the delta updates in shared jnp, so jnp and
 Pallas strips are interchangeable mid-run.
 
 Dispatch: :func:`repro.core.rd.resolve_rd_backend` picks the backend
-(TPU→``pallas``, CPU→``host`` under ``auto``; ``REPRO_RD_BACKEND``
-overrides); geometries beyond the single-block VMEM bounds
-(:func:`rd_pallas_fits`) fall back to the jnp strip regardless, like
-``PALLAS_MAX_M`` in the waterlevel kernel.  Off-TPU the kernel runs
-under ``interpret=True`` (tests and the ``--rd-sweep`` benchmark).
+(TPU→``pallas``, CPU→``host`` under ``auto``;
+``set_backend(rd=...)`` scopes override); geometries beyond the
+single-block VMEM bounds (:func:`rd_pallas_fits`) fall back to the jnp
+strip regardless, like ``PALLAS_MAX_M`` in the waterlevel kernel.
+Off-TPU the kernel runs under ``interpret=True`` (tests and the
+``--rd-sweep`` benchmark).  The geometry contract is declared below via
+:func:`repro.analysis.contracts.contract` and verified by
+``python -m repro.analysis.kernelcheck``.
 """
 
 from __future__ import annotations
@@ -43,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.contracts import Axis, contract
 
 # shared plumbing: stage tables, prefix scan, interpret resolution
 from .waterlevel import _bitonic_stages, _interp, _scan_sum
@@ -66,6 +71,67 @@ RD_PALLAS_MAX_KEY_ROWS = 24
 def rd_pallas_fits(c_slots: int, n_key_rows: int) -> bool:
     """True when the slot geometry fits the single-block kernel."""
     return c_slots <= RD_PALLAS_MAX_C and n_key_rows <= RD_PALLAS_MAX_KEY_ROWS
+
+
+# ---------------------------------------------------------------------------
+# kernelcheck geometry contract (verified by repro.analysis.kernelcheck).
+#
+# Admissible input envelope for the strip key rows: replica counts (the
+# ``-count`` primary key) come from per-task holder sets, member counts
+# sum to the instance's task total, and the alt row carries busy values
+# or the ``_BIG`` sole-copy sentinel.
+
+RD_ENV_A_MAX = 1 << 6  # replication-factor bound (−count key row)
+RD_ENV_TASKS_MAX = 1 << 20  # Σ member counts per instance (prefix sum)
+
+
+def _rd_strip_dispatch(geom: dict) -> str:
+    return "pallas" if rd_pallas_fits(geom["c"], geom["rows"]) else "jnp"
+
+
+def _rd_strip_vmem(geom: dict) -> dict[str, tuple[tuple[int, ...], int]]:
+    c, rows = geom["c"], geom["rows"]
+    return {
+        "keys/in": ((rows, c), 4),
+        "size/in": ((1, c), 4),
+        "take/out": ((1, c), 4),
+        "idx/out": ((1, c), 4),
+        "sort carries (keys,size,idx)": ((rows + 2, c), 4),
+        "partner rolls (keys,size,idx)": ((rows + 2, c), 4),
+        "scan temporaries (prefix,prev)": ((2, c), 4),
+    }
+
+
+def _rd_strip_ranges(geom: dict) -> list:
+    from repro.analysis.contracts import Interval, RangeClaim
+
+    neg_count = Interval(-RD_ENV_A_MAX, 0)
+    tasks = Interval(0, RD_ENV_TASKS_MAX)
+    # packed holder words: two 15-bit ids per int32, must match
+    # repro.core.rd_jax._PACK_BITS (claimed precisely in that contract)
+    packed = (Interval(0, (1 << 15) - 1) << 15) | Interval(0, (1 << 15) - 1)
+    return [
+        RangeClaim(
+            "non-candidate sentinel headroom (_BIG − max real −count)",
+            Interval.const(_BIG) - neg_count,
+            positive=True,
+        ),
+        RangeClaim("alt key row (busy or _BIG sentinel)", Interval(0, _BIG)),
+        RangeClaim("packed holder key word", packed, bits=30),
+        RangeClaim("member-count prefix sum", tasks),
+        RangeClaim("quota clamp (quota − prev)", Interval(-RD_ENV_TASKS_MAX, RD_ENV_TASKS_MAX)),
+    ]
+
+
+def _rd_strip_abstract(geom: dict):
+    c, rows = geom["c"], geom["rows"]
+    i32 = jnp.int32
+    fn = functools.partial(_rd_strip_call, interpret=True)
+    return fn, (
+        jax.ShapeDtypeStruct((rows, c), i32),
+        jax.ShapeDtypeStruct((c,), i32),
+        jax.ShapeDtypeStruct((), i32),
+    )
 
 
 def _rd_strip_kernel(
@@ -158,6 +224,25 @@ def _rd_strip_call(
     return take[0], idx[0]
 
 
+@contract(
+    "rd.strip",
+    axes=(
+        Axis("c", (128, 256, 1024, 4096, RD_PALLAS_MAX_C), past=(RD_PALLAS_MAX_C * 2,)),
+        Axis("rows", (4, 8, 23, RD_PALLAS_MAX_KEY_ROWS), past=(25, 32)),
+    ),
+    backends=("jnp", "pallas"),
+    device_backends=("pallas",),
+    dispatch=_rd_strip_dispatch,
+    vmem=_rd_strip_vmem,
+    ranges=_rd_strip_ranges,
+    signature=lambda geom: ("rd-strip", geom["c"], geom["rows"]),
+    max_signatures=24,  # pow2 slot classes × holder-row classes
+    abstract=_rd_strip_abstract,
+    eval_points=3,
+    notes="single-block multi-row lexicographic strip scan; geometries "
+    "past (RD_PALLAS_MAX_C, RD_PALLAS_MAX_KEY_ROWS) fall back to the "
+    "jnp lexsort strip",
+)
 def rd_strip_takes_pallas(
     keys: jax.Array,
     size: jax.Array,

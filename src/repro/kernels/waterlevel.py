@@ -31,11 +31,16 @@ Dispatch policy (:func:`resolve_use_pallas`): Pallas engages on TPU by
 default and auto-falls back to the jnp path on CPU, where ``pallas_call``
 would only run in (slow) interpret mode.  Tests and the benchmark sweep
 force the kernel on CPU with ``use_pallas=True``, which runs it under
-``interpret=True``.  ``REPRO_WATERLEVEL_BACKEND={pallas,jnp,auto}``
-overrides the default.  The single-block design keeps the padded arrays
+``interpret=True``; ``repro.backend.set_backend(waterlevel=...)`` scopes
+override the default.  The single-block design keeps the padded arrays
 (busy, μ, index, plus scan temporaries) in VMEM, which bounds the
 supported width at ``PALLAS_MAX_M``; beyond that the dispatcher falls
 back to jnp regardless of the override.
+
+The geometry contract (VMEM blocks, int32 overflow envelope, dispatch
+coverage, jit-cache surface) is declared on the entry points via
+:func:`repro.analysis.contracts.contract` and verified without a device
+by ``python -m repro.analysis.kernelcheck``.
 """
 
 from __future__ import annotations
@@ -48,8 +53,17 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis.contracts import Interval, RangeClaim, choice, contract, span
+
 __all__ = [
     "PALLAS_MAX_M",
+    "WL_BUSY0_MAX",
+    "WL_DEMAND_MAX",
+    "WL_LEVEL_MAX",
+    "WL_M_MAX",
+    "WL_MU_MAX",
+    "WL_SUM_BMU_MAX",
+    "WL_TOTAL_DEMAND_MAX",
     "resolve_use_pallas",
     "water_level_pallas",
     "water_fill_alloc_pallas",
@@ -78,8 +92,7 @@ def resolve_use_pallas(explicit: bool | None, m: int) -> bool:
 
     ``explicit`` wins when given; otherwise the choice comes from
     :func:`repro.backend.resolve` (``set_backend(waterlevel=...)``
-    scopes, then the deprecated ``REPRO_WATERLEVEL_BACKEND`` env shim),
-    with ``auto`` choosing Pallas only on TPU.  Widths beyond
+    scopes), with ``auto`` choosing Pallas only on TPU.  Widths beyond
     :data:`PALLAS_MAX_M` always fall back to jnp (the single-block
     kernel would not fit VMEM).
     """
@@ -95,6 +108,113 @@ def resolve_use_pallas(explicit: bool | None, m: int) -> bool:
     if choice == "pallas":
         return True
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# kernelcheck geometry contract (verified by repro.analysis.kernelcheck).
+#
+# Admissible input envelope the int32 range proofs assume.  The engine's
+# busy times, μ and demands are small integers (paper Sec. V uses μ ≤ 4
+# and per-job task counts ≲ 10^4); these bounds leave orders of magnitude
+# of headroom while keeping every claim provable:
+#
+# - WL_SUM_BMU_MAX bounds Σ busy·μ at kernel entry.  The water-fill
+#   adapters *preserve* it: one burst raises Σ busy·μ by at most the
+#   allocated demand plus one level step (Σ μ), so
+#   Σ busy0·μ + total demand + Σ μ ≤ 2^30 + 2·2^20 < WL_SUM_BMU_MAX
+#   even at the widest certified cluster (WL_M_MAX lanes).
+# - WL_LEVEL_MAX bounds any evolved busy entry: the minimal water level
+#   never exceeds the smallest available busy time plus the demand, so
+#   levels fed back as busy stay ≤ WL_BUSY0_MAX + WL_TOTAL_DEMAND_MAX.
+
+WL_BUSY0_MAX = 1 << 10  # initial (pre-burst) per-server busy time
+WL_MU_MAX = 1 << 4  # per-server tasks/slot (μ)
+WL_DEMAND_MAX = 1 << 20  # tasks per water-level call (one group)
+WL_TOTAL_DEMAND_MAX = 1 << 20  # tasks per job/burst (Σ groups, Σ jobs)
+WL_M_MAX = 1 << 16  # widest cluster the jnp fallback is certified for
+WL_LEVEL_MAX = WL_BUSY0_MAX + WL_TOTAL_DEMAND_MAX
+WL_SUM_BMU_MAX = (1 << 30) + (1 << 22)  # admissible Σ busy·μ at entry
+
+
+def _wl_lanes(m: int) -> int:
+    return max(_LANES, _next_pow2(m))
+
+
+def _wl_dispatch(geom: dict) -> str:
+    from repro import backend as backend_config
+
+    with backend_config.set_backend(waterlevel=geom["requested"]):
+        return "pallas" if resolve_use_pallas(None, geom["m"]) else "jnp"
+
+
+def wl_range_claims(m: int) -> list[RangeClaim]:
+    """Interval claims shared by the kernel and its jnp twin (identical
+    int32 arithmetic).  ``m`` only enters through Σ μ; the Σ busy·μ
+    prefix is bounded by the declared envelope, not busy_max·μ_max·m
+    (which would be unachievable: raising every busy entry costs demand
+    that the envelope also bounds)."""
+    busy = Interval(0, WL_LEVEL_MAX)  # evolved levels feed back as busy
+    mu = Interval(0, WL_MU_MAX)
+    demand = Interval(0, WL_DEMAND_MAX)
+    sum_bmu = Interval(0, WL_SUM_BMU_MAX)
+    cw = mu * m  # inclusive prefix sum of μ
+    xi_num = demand + sum_bmu  # ξ numerator: T + Σ busy·μ
+    level = busy + demand + 1  # minimality + the ξ ≥ b+1 clamp
+    caps = level * mu  # per-lane capacity at the level
+    alloc_prefix = demand + cw  # Σ caps ≤ T + one level step of capacity
+    return [
+        RangeClaim(
+            "sort sentinel headroom (_BIG - busy)",
+            Interval.const(_BIG) - busy,
+            positive=True,
+        ),
+        RangeClaim("cw prefix sum (Σ μ)", cw),
+        RangeClaim("cbw prefix sum (Σ busy·μ)", sum_bmu),
+        RangeClaim("ξ numerator (T + Σ busy·μ)", xi_num),
+        RangeClaim("water level", level),
+        RangeClaim("per-lane capacity at level", caps),
+        RangeClaim("allocation prefix (Alg. 2 clamp)", alloc_prefix),
+    ]
+
+
+def wl_vmem_blocks(geom: dict) -> dict[str, tuple[tuple[int, ...], int]]:
+    """Per-invocation VMEM blocks at the padded lane count: kernel
+    operands/outputs plus the live scan/sort temporaries (the batch grid
+    hands each program the same one-row view)."""
+    lanes = _wl_lanes(geom["m"])
+    row = ((1, lanes), 4)
+    return {
+        "busy/in": row,
+        "mu/in": row,
+        "take/out": row,
+        "idx/out": row,
+        "sort carries (b,w,idx)": ((3, lanes), 4),
+        "partner rolls (b,w,idx)": ((3, lanes), 4),
+        "scan temporaries (cw,cbw,caps,prev)": ((4, lanes), 4),
+    }
+
+
+def _wl_abstract(geom: dict):
+    lanes = _wl_lanes(geom["m"])
+    i32 = jnp.int32
+    fn = functools.partial(_waterlevel_call_padded, interpret=True)
+    return fn, (
+        jax.ShapeDtypeStruct((1, lanes), i32),
+        jax.ShapeDtypeStruct((1, lanes), i32),
+        jax.ShapeDtypeStruct((1, 1), i32),
+    )
+
+
+def _wl_batch_abstract(geom: dict):
+    lanes = _wl_lanes(geom["m"])
+    bsz = geom["b"]
+    i32 = jnp.int32
+    fn = functools.partial(_waterlevel_call_padded_batch, interpret=True)
+    return fn, (
+        jax.ShapeDtypeStruct((bsz, lanes), i32),
+        jax.ShapeDtypeStruct((bsz, lanes), i32),
+        jax.ShapeDtypeStruct((bsz, 1), i32),
+    )
 
 
 def _scan_sum(x: jax.Array, lane: jax.Array, n: int) -> jax.Array:
@@ -327,6 +447,30 @@ def water_level_pallas(
     return jnp.where(demand > 0, level, b.min())
 
 
+@contract(
+    "waterlevel.kernel",
+    axes=(
+        span(
+            "m",
+            1,
+            PALLAS_MAX_M,
+            boundaries=(_LANES, 1 << 12, PALLAS_MAX_M),
+            past=(PALLAS_MAX_M + 1, PALLAS_MAX_M * 2),
+        ),
+        choice("requested", "jnp", "pallas"),
+    ),
+    backends=("jnp", "pallas"),
+    device_backends=("pallas",),
+    dispatch=_wl_dispatch,
+    vmem=wl_vmem_blocks,
+    ranges=lambda geom: wl_range_claims(geom["m"]),
+    signature=lambda geom: ("waterlevel", _wl_lanes(geom["m"])),
+    max_signatures=16,  # pow2 lane classes from 128 to PALLAS_MAX_M
+    abstract=_wl_abstract,
+    eval_points=3,
+    notes="single-block fused sort+scan water level; widths past "
+    "PALLAS_MAX_M must fall back to jnp even when pallas is forced",
+)
 def water_fill_alloc_pallas(
     busy: jax.Array,
     mu: jax.Array,
@@ -349,6 +493,32 @@ def water_fill_alloc_pallas(
     return alloc, jnp.where(demand > 0, level, b.min())
 
 
+@contract(
+    "waterlevel.kernel-batch",
+    axes=(
+        span(
+            "m",
+            1,
+            PALLAS_MAX_M,
+            boundaries=(_LANES, PALLAS_MAX_M),
+            past=(PALLAS_MAX_M + 1,),
+        ),
+        choice("b", 1, 2, 7, 32, 64),
+        choice("requested", "jnp", "pallas"),
+    ),
+    backends=("jnp", "pallas"),
+    device_backends=("pallas",),
+    dispatch=_wl_dispatch,
+    vmem=wl_vmem_blocks,  # the (B,) grid hands each program one row's blocks
+    ranges=lambda geom: wl_range_claims(geom["m"]),
+    signature=lambda geom: ("waterlevel-batch", geom["b"], _wl_lanes(geom["m"])),
+    max_signatures=32,  # burst-size values × pow2 lane classes
+    abstract=_wl_batch_abstract,
+    eval_points=3,
+    notes="batched-grid twin; B enters the jit cache unpadded here — "
+    "the wf_jax chain adapter pads it, the plain batch adapter keys "
+    "on the caller's burst size",
+)
 def water_fill_alloc_pallas_batch(
     busy: jax.Array,
     mu: jax.Array,

@@ -1,0 +1,36 @@
+"""kernelcheck negative fixture: the coverage check must fire.
+
+Declares a dispatcher that handles admissible geometries but has no
+fallback path past the device ceiling: beyond ``MAX_M`` it raises
+instead of routing to host (and at exactly ``MAX_M`` it returns a
+backend name that was never declared).  Every real entry point in this
+repo routes past-ceiling geometries to the jnp or host pipeline;
+kernelcheck over this module must exit 1 with ``coverage`` violations
+on both gap shapes.
+"""
+
+from repro.analysis.contracts import contract, span
+
+MAX_M = 1 << 15
+
+
+def _dispatch(geom):
+    m = geom["m"]
+    if m > MAX_M:
+        # the gap: no fallback branch for past-ceiling widths
+        raise ValueError(f"no kernel for m={m}")
+    if m == MAX_M:
+        return "cuda"  # not a declared backend
+    return "pallas"
+
+
+@contract(
+    "fixture.coverage-gap",
+    axes=(span("m", 128, MAX_M, boundaries=(MAX_M,), past=(MAX_M + 1, MAX_M * 2)),),
+    backends=("jnp", "pallas"),
+    dispatch=_dispatch,
+    notes="negative fixture: dispatch raises past the ceiling and "
+    "returns an undeclared backend at it",
+)
+def fake_kernel(busy, mu):
+    raise NotImplementedError("fixture entry point is never executed")

@@ -1,0 +1,48 @@
+"""kernelcheck negative fixture: the range check must fire.
+
+Declares an accumulator claim that genuinely overflows int32 under the
+declared input envelope (busy_max * mu_max * m at the widest admissible
+m), plus a packed-id field one bit too narrow for the declared server
+count.  Both are real bugs the repo's kernels avoid (the waterlevel
+contract bounds the busy.mu sum amortised instead of via the direct
+product; rd packs 15-bit ids).  kernelcheck over this module must exit
+1 with ``range`` violations.
+"""
+
+from repro.analysis.contracts import Interval, RangeClaim, contract, span
+
+BUSY_MAX = 1 << 20
+MU_MAX = 1 << 4
+
+
+def _dispatch(geom):
+    return "pallas"
+
+
+def _ranges(geom):
+    m = geom["m"]
+    busy = Interval(0, BUSY_MAX)
+    mu = Interval(1, MU_MAX)
+    return [
+        # direct product bound: 2^20 * 2^4 * 2^16 = 2^40 >> int32
+        RangeClaim("sum of busy*mu over m servers", busy * mu * m),
+        # 16-bit ids shifted into a field sized for 15-bit ids
+        RangeClaim(
+            "packed holder word (two server ids)",
+            (Interval(0, m - 1) << 15) | Interval(0, m - 1),
+            bits=30,
+        ),
+    ]
+
+
+@contract(
+    "fixture.range-overflow",
+    axes=(span("m", 128, 1 << 16, boundaries=(1 << 15,)),),
+    backends=("pallas",),
+    dispatch=_dispatch,
+    ranges=_ranges,
+    notes="negative fixture: direct-product accumulator and oversized "
+    "packed field overflow under the declared envelope",
+)
+def fake_kernel(busy, mu):
+    raise NotImplementedError("fixture entry point is never executed")

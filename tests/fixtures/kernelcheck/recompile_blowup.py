@@ -1,0 +1,45 @@
+"""kernelcheck negative fixture: the recompile-surface check must fire.
+
+Declares a jit-cache signature keyed on the *raw* server count instead
+of its padded power-of-two class — every distinct m retraces, so the
+boundary sweep induces far more signatures than the declared bound.
+One lattice point additionally leaks a non-static (list-valued)
+signature component, the shape-as-data bug ``static_argnames`` cannot
+cache.  kernelcheck over this module must exit 1 with ``recompile``
+violations for both.
+"""
+
+from repro.analysis.contracts import contract, span
+
+
+def _dispatch(geom):
+    return "pallas"
+
+
+def _signature(geom):
+    m = geom["m"]
+    if m == 128:
+        # non-static leaf: a runtime container in the cache key
+        return ("fixture", [m])
+    return ("fixture", m)  # raw m: one trace per distinct width
+
+
+@contract(
+    "fixture.recompile-blowup",
+    axes=(
+        span(
+            "m",
+            128,
+            1 << 12,
+            boundaries=(256, 512, 1024, 2048, 3000, 3333, 4000),
+        ),
+    ),
+    backends=("pallas",),
+    dispatch=_dispatch,
+    signature=_signature,
+    max_signatures=8,
+    notes="negative fixture: raw-width cache key blows the signature "
+    "bound and one point carries a non-static component",
+)
+def fake_kernel(busy, mu):
+    raise NotImplementedError("fixture entry point is never executed")

@@ -2,12 +2,12 @@
 
 import os
 
-BACKEND = os.environ.get("REPRO_RD_BACKEND", "auto")  # import-time read
+BACKEND = os.environ.get("MYPROJ_RD_BACKEND", "auto")  # import-time read
 
 
 def pick_waterlevel_backend():
-    return os.getenv("REPRO_WATERLEVEL_BACKEND", "auto")
+    return os.getenv("MYPROJ_WATERLEVEL_BACKEND", "auto")
 
 
 def force(kind, value):
-    os.environ["REPRO_" + kind.upper() + "_BACKEND"] = value
+    os.environ["MYPROJ_" + kind.upper() + "_BACKEND"] = value

@@ -1,0 +1,21 @@
+"""R007 negative: backend choice scoped or forwarded, never pinned."""
+
+from repro.backend import set_backend
+from repro.core import rd_jax, wf_jax
+
+
+def compare_paths(problem):
+    with set_backend(waterlevel="pallas", rd="pallas"):
+        a = wf_jax.water_filling_jax(problem)
+        b = rd_jax.replica_deletion_jax(problem)
+    return a, b
+
+
+def forward(problem, backend):
+    # forwarding a caller-supplied choice is plumbing, not a pin
+    return rd_jax.replica_deletion_jax(problem, backend=backend)
+
+
+def explicit_none(problem):
+    # None means "resolve via scopes" — the default, stated explicitly
+    return wf_jax.water_filling_jax(problem, use_pallas=None)

@@ -1,0 +1,13 @@
+"""R007 positive: per-call backend literals outside the resolution layer."""
+
+from repro.core import rd_jax, wf_jax
+
+
+def compare_paths(problem):
+    a = wf_jax.water_filling_jax(problem, use_pallas=True)  # pinned literal
+    b = rd_jax.replica_deletion_jax(problem, backend="pallas")  # pinned literal
+    return a, b
+
+
+def jnp_twin(problem):
+    return wf_jax.water_filling_jax(problem, use_pallas=False)

@@ -1,25 +1,17 @@
 """Backend config object + unified name registry (the config surface).
 
-The backend satellite collapsed REPRO_WATERLEVEL_BACKEND /
-REPRO_RD_BACKEND / per-call flags into ``repro.backend``: explicit
-argument > ``set_backend`` scope > env var (deprecated shim) > auto.
-Both the env path and the config path are exercised against the real
-consumers (``resolve_rd_backend``, ``resolve_use_pallas``).  The
-registry satellite unified ALGORITHMS / BATCH_ALGORITHMS / TRACES /
-orderings into ``repro.registry`` with live backing-dict aliases.
+The backend satellite collapsed the legacy env vars and per-call flags
+into ``repro.backend``: explicit argument > ``set_backend`` scope >
+auto (the env shim finished its deprecation window and is deleted).
+The config path is exercised against the real consumers
+(``resolve_rd_backend``, ``resolve_use_pallas``).  The registry
+satellite unified ALGORITHMS / BATCH_ALGORITHMS / TRACES / orderings
+into ``repro.registry`` with live backing-dict aliases.
 """
-
-import warnings
 
 import pytest
 
 from repro import backend, registry
-
-
-@pytest.fixture(autouse=True)
-def _clean_env(monkeypatch):
-    monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
-    monkeypatch.delenv("REPRO_WATERLEVEL_BACKEND", raising=False)
 
 
 # ---- registry ---------------------------------------------------------------
@@ -87,8 +79,7 @@ def test_make_policy_resolves_through_registry():
 # ---- backend config object --------------------------------------------------
 
 
-def test_resolve_precedence_explicit_beats_all(monkeypatch):
-    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
+def test_resolve_precedence_explicit_beats_all():
     with backend.set_backend(rd="host"):
         assert backend.resolve("rd", "pallas") == "pallas"
 
@@ -105,28 +96,20 @@ def test_set_backend_scopes_nest_and_restore():
     assert backend.resolve("rd") == "auto"
 
 
-def test_env_shim_still_works_with_deprecation(monkeypatch):
-    monkeypatch.setenv("REPRO_RD_BACKEND", "host")
-    backend._warned_env.discard("REPRO_RD_BACKEND")
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        assert backend.resolve("rd") == "host"
-    assert any(
-        issubclass(w.category, DeprecationWarning)
-        and "set_backend" in str(w.message)
-        for w in caught
-    )
-    # config scope takes precedence over the env shim
-    with backend.set_backend(rd="jnp"):
-        assert backend.resolve("rd") == "jnp"
+def test_env_shim_is_gone(monkeypatch):
+    # the deprecation window is over: the old env vars must be inert
+    for kind in backend.BACKEND_KINDS:
+        monkeypatch.setenv(f"REPRO_{kind.upper()}_BACKEND", "jnp")
+        assert backend.resolve(kind) == "auto"
+    assert not hasattr(backend, "_warned_env")
+    # BACKEND_KINDS is now a plain kind -> choices map
+    assert backend.BACKEND_KINDS["rd"] == ("auto", "host", "jnp", "pallas")
+    assert backend.BACKEND_KINDS["waterlevel"] == ("auto", "pallas", "jnp")
 
 
-def test_invalid_choices_rejected_with_source(monkeypatch):
+def test_invalid_choices_rejected_with_source():
     with pytest.raises(ValueError, match="explicit"):
         backend.resolve("rd", "nope")
-    monkeypatch.setenv("REPRO_RD_BACKEND", "nope")
-    with pytest.raises(ValueError, match="REPRO_RD_BACKEND"):
-        backend.resolve("rd")
     with pytest.raises(ValueError, match="waterlevel"):
         backend.BackendConfig(waterlevel="host")  # not a waterlevel choice
     with pytest.raises(KeyError, match="nonsense"):
@@ -135,25 +118,24 @@ def test_invalid_choices_rejected_with_source(monkeypatch):
         backend.resolve("not-a-kind")
 
 
-def test_rd_consumer_env_and_config_paths(monkeypatch):
+def test_rd_consumer_config_path():
     from repro.core.rd import resolve_rd_backend
 
     assert resolve_rd_backend("pallas") == "pallas"  # explicit wins
-    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
-    assert resolve_rd_backend(None) == "jnp"  # env shim path
+    with backend.set_backend(rd="jnp"):
+        assert resolve_rd_backend(None) == "jnp"  # config path
     with backend.set_backend(rd="host"):
-        assert resolve_rd_backend(None) == "host"  # config path
-    monkeypatch.delenv("REPRO_RD_BACKEND")
+        assert resolve_rd_backend(None) == "host"
     assert resolve_rd_backend(None) in ("host", "pallas")  # auto
 
 
-def test_waterlevel_consumer_env_and_config_paths(monkeypatch):
+def test_waterlevel_consumer_config_path():
     from repro.kernels.waterlevel import PALLAS_MAX_M, resolve_use_pallas
 
-    monkeypatch.setenv("REPRO_WATERLEVEL_BACKEND", "pallas")
-    assert resolve_use_pallas(None, 64) is True  # env shim path
+    with backend.set_backend(waterlevel="pallas"):
+        assert resolve_use_pallas(None, 64) is True  # config path
     with backend.set_backend(waterlevel="jnp"):
-        assert resolve_use_pallas(None, 64) is False  # config path
+        assert resolve_use_pallas(None, 64) is False
     # the device-shape gate still overrides every source
     assert resolve_use_pallas(True, PALLAS_MAX_M + 1) is False
     assert resolve_use_pallas(True, 64) is True

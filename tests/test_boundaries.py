@@ -1,0 +1,159 @@
+"""Boundary regressions at the device-geometry ceilings.
+
+kernelcheck proves the dispatch/memory/range claims abstractly; these
+tests pin the same boundaries concretely — the dispatch decision AND
+host-side result parity at ``m == PALLAS_MAX_M``, one past it,
+``n_servers ∈ {RD_DEVICE_MAX_M, RD_DEVICE_MAX_M + 1}``, and the first
+slot geometry past the RD kernel's single-block VMEM bounds.  Each case
+is a geometry where an off-by-one in the ceiling checks would silently
+route to a garbage path instead of the fallback.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backend import set_backend
+from repro.core import AssignmentProblem, TaskGroup
+from repro.core import waterlevel as wl_np
+from repro.core import wf_jax
+from repro.core.rd import RD_DEVICE_MAX_M, replica_deletion, replica_deletion_auto
+from repro.kernels.rd import (
+    RD_PALLAS_MAX_C,
+    RD_PALLAS_MAX_KEY_ROWS,
+    rd_pallas_fits,
+    rd_strip_takes_pallas,
+)
+from repro.kernels.waterlevel import PALLAS_MAX_M, resolve_use_pallas
+
+# ---- waterlevel: the PALLAS_MAX_M single-block ceiling ----------------------
+
+
+def test_resolve_use_pallas_at_and_past_ceiling():
+    # at the ceiling the kernel is still eligible (forced or scoped) ...
+    assert resolve_use_pallas(True, PALLAS_MAX_M) is True
+    with set_backend(waterlevel="pallas"):
+        assert resolve_use_pallas(None, PALLAS_MAX_M) is True
+    # ... one past it the shape gate beats every request
+    assert resolve_use_pallas(True, PALLAS_MAX_M + 1) is False
+    with set_backend(waterlevel="pallas"):
+        assert resolve_use_pallas(None, PALLAS_MAX_M + 1) is False
+
+
+def test_water_level_parity_at_pallas_ceiling():
+    """Host closed form ≡ jnp device path at exactly m = PALLAS_MAX_M
+    (the widest width the kernel may still claim)."""
+    rng = np.random.default_rng(0)
+    m = PALLAS_MAX_M
+    busy = rng.integers(0, 40, m)
+    mu = rng.integers(1, 5, m)
+    demand = 10_000
+    host_level = wl_np.water_level(busy, mu, demand)
+    args = (
+        jnp.asarray(busy, jnp.int32),
+        jnp.asarray(mu, jnp.int32),
+        jnp.ones(m, jnp.bool_),
+        jnp.int32(demand),
+    )
+    with set_backend(waterlevel="jnp"):
+        assert int(wf_jax.water_level(*args)) == host_level
+    host_alloc, host_xi = wl_np.water_fill_alloc(busy, mu, demand)
+    with set_backend(waterlevel="jnp"):
+        alloc, xi = wf_jax.water_fill_alloc(*args)
+    assert int(xi) == int(host_xi)
+    assert (np.asarray(alloc) == host_alloc).all()
+
+
+def test_wf_adapter_falls_back_past_pallas_ceiling():
+    """One past PALLAS_MAX_M, a forced-pallas scope must still produce
+    the host allocation (via the jnp fallback), not raise or garble."""
+    m = PALLAS_MAX_M + 1
+    busy = np.zeros(m, dtype=np.int64)
+    busy[: m // 2] = 3
+    mu = np.ones(m, dtype=np.int64)
+    problem = AssignmentProblem(
+        busy=busy, mu=mu, groups=(TaskGroup(64, tuple(range(0, m, 1024))),)
+    )
+    from repro.core.wf import water_filling
+
+    host = water_filling(problem)
+    with set_backend(waterlevel="pallas"):
+        dev = wf_jax.water_filling_jax(problem)
+    assert dev.alloc == host.alloc
+    assert dev.phi == host.phi
+
+
+# ---- RD: the RD_DEVICE_MAX_M packing ceiling --------------------------------
+
+
+def _wide_rd_problem(m):
+    busy = np.zeros(m, dtype=np.int64)
+    busy[0] = 5
+    return AssignmentProblem(
+        busy=busy,
+        mu=np.ones(m, dtype=np.int64),
+        groups=(
+            TaskGroup(4, (0, 1, m - 1)),
+            TaskGroup(2, (m - 2, m - 1)),
+        ),
+    )
+
+
+def test_rd_device_at_packing_ceiling_matches_host():
+    """n_servers = RD_DEVICE_MAX_M = 2^15 - 1: the widest cluster whose
+    ids still fit the 15-bit packed key fields."""
+    from repro.core.rd_jax import replica_deletion_jax
+
+    problem = _wide_rd_problem(RD_DEVICE_MAX_M)
+    host = replica_deletion(problem)
+    dev = replica_deletion_jax(problem)
+    assert dev.alloc == host.alloc
+    assert dev.phi == host.phi
+
+
+def test_rd_device_one_past_packing_ceiling():
+    """n_servers = 2^15: the device entry refuses (a 15-bit id field
+    would alias server 0) and auto-dispatch silently stays on host."""
+    from repro.core.rd_jax import replica_deletion_jax
+
+    problem = _wide_rd_problem(RD_DEVICE_MAX_M + 1)
+    with pytest.raises(ValueError, match="at most"):
+        replica_deletion_jax(problem)
+    host = replica_deletion(problem)
+    with set_backend(rd="pallas"):
+        auto = replica_deletion_auto(problem)
+    assert auto.alloc == host.alloc
+
+
+# ---- RD: one past the strip kernel's single-block VMEM bounds ---------------
+
+
+def test_rd_pallas_fits_boundaries():
+    assert rd_pallas_fits(RD_PALLAS_MAX_C, RD_PALLAS_MAX_KEY_ROWS)
+    assert not rd_pallas_fits(RD_PALLAS_MAX_C * 2, RD_PALLAS_MAX_KEY_ROWS)
+    assert not rd_pallas_fits(RD_PALLAS_MAX_C, RD_PALLAS_MAX_KEY_ROWS + 1)
+
+
+def test_resolve_device_falls_back_past_vmem_bounds():
+    """A pallas request on a slot geometry one past the single-block
+    bounds must resolve to the jnp strip, never a doomed kernel call."""
+    from repro.core.rd_jax import _resolve_device
+
+    a_pad_over = 2 * (RD_PALLAS_MAX_KEY_ROWS + 1 - 3)  # rows = 3 + a_pad/2
+    use_pallas, _ = _resolve_device("pallas", RD_PALLAS_MAX_C * 2, 2)
+    assert use_pallas is False
+    use_pallas, _ = _resolve_device("pallas", 128, a_pad_over)
+    assert use_pallas is False
+    use_pallas, _ = _resolve_device("pallas", RD_PALLAS_MAX_C, 2)
+    assert use_pallas is True
+
+
+def test_rd_strip_kernel_rejects_oversized_block():
+    keys = jnp.zeros((RD_PALLAS_MAX_KEY_ROWS + 1, 128), jnp.int32)
+    size = jnp.zeros((128,), jnp.int32)
+    with pytest.raises(ValueError, match="single-block"):
+        rd_strip_takes_pallas(keys, size, jnp.int32(1))
+    keys = jnp.zeros((4, RD_PALLAS_MAX_C * 2), jnp.int32)
+    size = jnp.zeros((RD_PALLAS_MAX_C * 2,), jnp.int32)
+    with pytest.raises(ValueError, match="single-block"):
+        rd_strip_takes_pallas(keys, size, jnp.int32(1))

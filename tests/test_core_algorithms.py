@@ -210,10 +210,13 @@ def test_water_level_matches_device_on_int32_boundary():
     mask = np.ones(2, dtype=bool)
     for demand in (0, 1, 11):
         host = water_level(busy, mu, demand)
-        dev = int(
-            wf_jax.water_level(
-                jnp.array(busy), jnp.array(mu), jnp.array(mask),
-                jnp.int32(demand), use_pallas=False,
+        from repro.backend import set_backend
+
+        with set_backend(waterlevel="jnp"):
+            dev = int(
+                wf_jax.water_level(
+                    jnp.array(busy), jnp.array(mu), jnp.array(mask),
+                    jnp.int32(demand),
+                )
             )
-        )
         assert host == dev

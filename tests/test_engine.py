@@ -458,14 +458,15 @@ def test_reorder_burst_folds_to_single_rescan(ordering):
 # ---- Pallas water-level backend through the engine --------------------------
 
 
-def test_engine_wf_jax_pallas_backend_schedule_identical(monkeypatch):
+def test_engine_wf_jax_pallas_backend_schedule_identical():
     """Forcing the Pallas water-level kernel (interpret mode on CPU) must
     leave the engine's realized schedule bit-identical to host WF — the
     wiring contract for repro.kernels.waterlevel."""
-    monkeypatch.setenv("REPRO_WATERLEVEL_BACKEND", "pallas")
+    from repro.backend import set_backend
+
     jobs = generate("bursty", n_jobs=10, total_tasks=800, n_servers=10, seed=5)
-    dev = SchedulingEngine(10, make_policy("wf_jax"), debug=True).run(jobs)
-    monkeypatch.delenv("REPRO_WATERLEVEL_BACKEND")
+    with set_backend(waterlevel="pallas"):
+        dev = SchedulingEngine(10, make_policy("wf_jax"), debug=True).run(jobs)
     host = SchedulingEngine(10, make_policy("wf")).run(jobs)
     assert dev.jct == host.jct
     assert dev.makespan == host.makespan

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.backend import set_backend
+
 from repro.kernels import (
     decode_attention,
     flash_attention,
@@ -158,10 +160,11 @@ def test_waterlevel_kernel_bit_identical_to_jnp():
                 jnp.array(busy), jnp.array(mu), jnp.array(mask),
                 jnp.int32(demand),
             )
-            assert int(wf_jax.water_level(*args, use_pallas=False)) == int(
-                water_level_pallas(*args)
-            )
-            a_j, x_j = wf_jax.water_fill_alloc(*args, use_pallas=False)
+            with set_backend(waterlevel="jnp"):
+                assert int(wf_jax.water_level(*args)) == int(
+                    water_level_pallas(*args)
+                )
+                a_j, x_j = wf_jax.water_fill_alloc(*args)
             a_p, x_p = water_fill_alloc_pallas(*args)
             assert int(x_j) == int(x_p)
             assert (np.asarray(a_j) == np.asarray(a_p)).all()
@@ -182,8 +185,10 @@ def test_waterlevel_batched_grid_bit_identical_to_vmap():
         gm[:, :, 0] = True  # no empty availability sets
         demands = jnp.asarray(rng.integers(0, 80, (b, k)), jnp.int32)
         args = (busy, mu, jnp.asarray(gm), demands)
-        a_j, l_j, p_j = wf_jax.water_fill_batch(*args, use_pallas=False)
-        a_p, l_p, p_p = wf_jax.water_fill_batch(*args, use_pallas=True)
+        with set_backend(waterlevel="jnp"):
+            a_j, l_j, p_j = wf_jax.water_fill_batch(*args)
+        with set_backend(waterlevel="pallas"):
+            a_p, l_p, p_p = wf_jax.water_fill_batch(*args)
         assert (np.asarray(a_j) == np.asarray(a_p)).all()
         assert (np.asarray(l_j) == np.asarray(l_p)).all()
         assert (np.asarray(p_j) == np.asarray(p_p)).all()

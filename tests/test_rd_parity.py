@@ -34,6 +34,7 @@ try:  # property tests engage when hypothesis is available (CI installs it)
 except ImportError:  # deterministic twins below still run
     HAVE_HYPOTHESIS = False
 
+from repro.backend import set_backend
 from repro.core import AssignmentProblem, TaskGroup, commit_busy
 from repro.core.rd import (
     replica_deletion,
@@ -169,7 +170,7 @@ def test_empty_problem_matches_host():
     from repro.core.rd_jax import replica_deletion_jax
 
     host = replica_deletion(problem)
-    dev = replica_deletion_jax(problem, backend="jnp")
+    dev = replica_deletion_jax(problem)
     assert dev.alloc == host.alloc == []
     assert dev.phi == host.phi
 
@@ -185,27 +186,27 @@ def test_overflow_falls_back_to_host(monkeypatch):
     monkeypatch.setattr(
         rd_jax, "rd_slot_capacity", lambda p: len(p.groups) + 1
     )
-    dev = rd_jax.replica_deletion_jax(problem, backend="jnp")
+    dev = rd_jax.replica_deletion_jax(problem)
     ref = replica_deletion_reference(problem)
     assert dev.alloc == ref.alloc
 
 
-def test_backend_resolution_env(monkeypatch):
-    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
-    assert resolve_rd_backend() == "jnp"
-    monkeypatch.setenv("REPRO_RD_BACKEND", "host")
-    assert resolve_rd_backend() == "host"
-    assert resolve_rd_backend("pallas") == "pallas"
-    monkeypatch.setenv("REPRO_RD_BACKEND", "nope")
-    with pytest.raises(ValueError, match="REPRO_RD_BACKEND"):
-        resolve_rd_backend()
-    monkeypatch.setenv("REPRO_RD_BACKEND", "auto")
+def test_backend_resolution_scopes():
+    with set_backend(rd="jnp"):
+        assert resolve_rd_backend() == "jnp"
+    with set_backend(rd="host"):
+        assert resolve_rd_backend() == "host"
+        assert resolve_rd_backend("pallas") == "pallas"  # explicit wins
+    with pytest.raises(ValueError, match="explicit"):
+        resolve_rd_backend("nope")
     # CPU container: auto must stay on the host path (never regress the
     # class-compressed per-arrival overhead)
     import jax
 
     expected = "pallas" if jax.default_backend() == "tpu" else "host"
-    assert resolve_rd_backend() == expected
+    with set_backend(rd="auto"):
+        assert resolve_rd_backend() == expected
+    assert resolve_rd_backend() == expected  # no scope at all
 
 
 def test_device_rejects_oversized_cluster():
@@ -218,7 +219,7 @@ def test_device_rejects_oversized_cluster():
         groups=(TaskGroup(1, (0, 1)),),
     )
     with pytest.raises(ValueError, match="at most"):
-        replica_deletion_jax(problem, backend="jnp")
+        replica_deletion_jax(problem)
     # the auto dispatcher silently stays on host instead
     host = replica_deletion(problem)
     assert replica_deletion_auto(problem).alloc == host.alloc
@@ -227,10 +228,9 @@ def test_device_rejects_oversized_cluster():
 # ---- batched burst admission ------------------------------------------------
 
 
-def test_rd_batch_chain_matches_sequential_host(rng, monkeypatch):
+def test_rd_batch_chain_matches_sequential_host(rng):
     """One chained device dispatch ≡ per-arrival host RD with eq. 2
     commits — the burst-admission contract of BATCH_ALGORITHMS["rd"]."""
-    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
     m = 10
     base_busy = rng.integers(0, 6, m)
     probs = [
@@ -241,7 +241,8 @@ def test_rd_batch_chain_matches_sequential_host(rng, monkeypatch):
         )
         for _ in range(3)
     ]
-    chained = replica_deletion_batch(probs)
+    with set_backend(rd="jnp"):
+        chained = replica_deletion_batch(probs)
     busy = base_busy.copy()
     for prob, got in zip(probs, chained):
         seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)
@@ -252,8 +253,7 @@ def test_rd_batch_chain_matches_sequential_host(rng, monkeypatch):
         busy = commit_busy(busy, host, seq.mu, m)
 
 
-def test_rd_batch_host_walk_matches_sequential(rng, monkeypatch):
-    monkeypatch.setenv("REPRO_RD_BACKEND", "host")
+def test_rd_batch_host_walk_matches_sequential(rng):
     m = 10
     base_busy = rng.integers(0, 6, m)
     probs = [
@@ -264,7 +264,8 @@ def test_rd_batch_host_walk_matches_sequential(rng, monkeypatch):
         )
         for _ in range(3)
     ]
-    walked = replica_deletion_batch(probs)
+    with set_backend(rd="host"):
+        walked = replica_deletion_batch(probs)
     busy = base_busy.copy()
     for prob, got in zip(probs, walked):
         seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)
@@ -280,7 +281,7 @@ def test_chain_rejects_mismatched_busy(monkeypatch):
     p1 = AssignmentProblem(busy=np.array([0, 0]), mu=np.array([1, 1]), groups=g)
     p2 = AssignmentProblem(busy=np.array([1, 0]), mu=np.array([1, 1]), groups=g)
     with pytest.raises(ValueError, match="same pre-burst busy"):
-        replica_deletion_jax_chain([p1, p2], backend="jnp")
+        replica_deletion_jax_chain([p1, p2])
 
 
 # ---- engine-level schedule equality -----------------------------------------
@@ -299,38 +300,35 @@ def _run(policy_name, ordering="fifo", **engine_kw):
     return engine.run(jobs)
 
 
-def test_engine_rd_jnp_batched_matches_host_sequential(monkeypatch):
-    monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
+def test_engine_rd_jnp_batched_matches_host_sequential():
     host = _run("rd")
-    monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
-    batched = _run("rd")
-    sequential = _run("rd", batch_arrivals=False)
+    with set_backend(rd="jnp"):
+        batched = _run("rd")
+        sequential = _run("rd", batch_arrivals=False)
     assert batched.jct == host.jct and batched.makespan == host.makespan
     assert sequential.jct == host.jct
 
 
 @pytest.mark.parametrize("scenario", ["bursty", "pareto_diurnal"])
 @pytest.mark.parametrize("ordering", ["fifo", "ocwf-acc"])
-def test_engine_rd_backends_schedule_identical(scenario, ordering, monkeypatch):
+def test_engine_rd_backends_schedule_identical(scenario, ordering):
     """The acceptance matrix: host ≡ jnp engine schedules on bursty +
     pareto_diurnal under fifo + ocwf-acc (rd and rd_plus)."""
     jobs = generate(scenario, n_jobs=6, total_tasks=200, n_servers=8, seed=11)
     for assign in ("rd", "rd_plus"):
-        monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
         host = SchedulingEngine(8, make_policy(assign, ordering)).run(jobs)
-        monkeypatch.setenv("REPRO_RD_BACKEND", "jnp")
-        dev = SchedulingEngine(8, make_policy(assign, ordering)).run(jobs)
+        with set_backend(rd="jnp"):
+            dev = SchedulingEngine(8, make_policy(assign, ordering)).run(jobs)
         assert dev.jct == host.jct
         assert dev.makespan == host.makespan
 
 
-def test_engine_rd_pallas_matches_host_tiny(monkeypatch):
+def test_engine_rd_pallas_matches_host_tiny():
     """End-to-end Pallas (interpret) engine run on a tiny trace."""
     jobs = generate("bursty", n_jobs=4, total_tasks=60, n_servers=6, seed=5)
-    monkeypatch.delenv("REPRO_RD_BACKEND", raising=False)
     host = SchedulingEngine(6, make_policy("rd")).run(jobs)
-    monkeypatch.setenv("REPRO_RD_BACKEND", "pallas")
-    dev = SchedulingEngine(6, make_policy("rd")).run(jobs)
+    with set_backend(rd="pallas"):
+        dev = SchedulingEngine(6, make_policy("rd")).run(jobs)
     assert dev.jct == host.jct
     assert dev.makespan == host.makespan
 
@@ -351,7 +349,7 @@ if HAVE_HYPOTHESIS:
         ref = replica_deletion_reference(problem)
         from repro.core.rd_jax import replica_deletion_jax
 
-        dev = replica_deletion_jax(problem, backend="jnp")
+        dev = replica_deletion_jax(problem)
         assert dev.alloc == ref.alloc
         assert dev.phi == ref.phi
 
@@ -363,7 +361,7 @@ if HAVE_HYPOTHESIS:
         ref = replica_deletion_reference(problem)
         from repro.core.rd_jax import replica_deletion_jax
 
-        dev = replica_deletion_jax(problem, backend="pallas")
+        dev = replica_deletion_jax(problem, backend="pallas")  # reprolint: disable=R007 parity property pins the kernel strip explicitly
         assert dev.alloc == ref.alloc
 
     @given(seed=st.integers(0, 100_000), n_jobs=st.integers(1, 4))
@@ -382,7 +380,7 @@ if HAVE_HYPOTHESIS:
         ]
         from repro.core.rd_jax import replica_deletion_jax_chain
 
-        chained = replica_deletion_jax_chain(probs, backend="jnp")
+        chained = replica_deletion_jax_chain(probs)
         busy = base_busy.copy()
         for prob, got in zip(probs, chained):
             seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)

@@ -23,6 +23,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.backend import set_backend
 from repro.core import AssignmentProblem, TaskGroup, commit_busy, water_filling
 from repro.core import waterlevel as wl_np
 from repro.core import wf_jax
@@ -57,12 +58,14 @@ def _assert_three_way(busy, mu, mask, demand):
     """Level and allocation must match bit-for-bit across all paths."""
     args = (jnp.array(busy), jnp.array(mu), jnp.array(mask), jnp.int32(demand))
     host_level = wl_np.water_level(busy[mask], mu[mask], demand)
-    jnp_level = int(wf_jax.water_level(*args, use_pallas=False))
+    with set_backend(waterlevel="jnp"):
+        jnp_level = int(wf_jax.water_level(*args))
     pallas_level = int(water_level_pallas(*args))
     assert host_level == jnp_level == pallas_level
 
     host_alloc, host_xi = wl_np.water_fill_alloc(busy[mask], mu[mask], demand)
-    jnp_alloc, jnp_xi = wf_jax.water_fill_alloc(*args, use_pallas=False)
+    with set_backend(waterlevel="jnp"):
+        jnp_alloc, jnp_xi = wf_jax.water_fill_alloc(*args)
     pal_alloc, pal_xi = water_fill_alloc_pallas(*args)
     assert int(host_xi) == int(jnp_xi) == int(pal_xi)
     full = np.zeros(len(busy), dtype=np.int64)
@@ -146,8 +149,9 @@ def test_groups_scan_pallas_matches_jnp_bitwise(seed):
             gm[i, 0] = True
     demands = rng.integers(0, 50, k)  # demand-0 groups are no-ops
     args = (jnp.array(busy), jnp.array(mu), jnp.array(gm), jnp.array(demands))
-    a_j, l_j, p_j = wf_jax._wf_groups_jit(*args, use_pallas=False)
-    a_p, l_p, p_p = wf_jax._wf_groups_jit(*args, use_pallas=True)
+    # the private jit wrapper takes its static use_pallas arg directly
+    a_j, l_j, p_j = wf_jax._wf_groups_jit(*args, use_pallas=False)  # reprolint: disable=R007 device-layer twin pins the jnp trace explicitly
+    a_p, l_p, p_p = wf_jax._wf_groups_jit(*args, use_pallas=True)  # reprolint: disable=R007 device-layer twin pins the kernel trace explicitly
     assert (np.asarray(a_j) == np.asarray(a_p)).all()
     assert (np.asarray(l_j) == np.asarray(l_p)).all()
     assert int(p_j) == int(p_p)
@@ -171,8 +175,10 @@ def test_batch_pallas_matches_vmapped_jnp_bitwise(seed, b, m):
     gm[:, :, 0] = True  # no empty availability sets
     demands = jnp.asarray(rng.integers(0, 80, (b, k)), jnp.int32)
     args = (busy, mu, jnp.asarray(gm), demands)
-    a_j, l_j, p_j = wf_jax.water_fill_batch(*args, use_pallas=False)
-    a_p, l_p, p_p = wf_jax.water_fill_batch(*args, use_pallas=True)
+    with set_backend(waterlevel="jnp"):
+        a_j, l_j, p_j = wf_jax.water_fill_batch(*args)
+    with set_backend(waterlevel="pallas"):
+        a_p, l_p, p_p = wf_jax.water_fill_batch(*args)
     assert (np.asarray(a_j) == np.asarray(a_p)).all()
     assert (np.asarray(l_j) == np.asarray(l_p)).all()
     assert (np.asarray(p_j) == np.asarray(p_p)).all()
@@ -186,10 +192,11 @@ def test_jax_batch_adapter_pallas_backend_matches_jnp(seed, n_probs):
     rng = np.random.default_rng(seed)
     m = 12
     probs = [_problem(rng, m=m) for _ in range(n_probs)]
-    for a, b in zip(
-        wf_jax.water_filling_jax_batch(probs, use_pallas=False),
-        wf_jax.water_filling_jax_batch(probs, use_pallas=True),
-    ):
+    with set_backend(waterlevel="jnp"):
+        via_jnp = wf_jax.water_filling_jax_batch(probs)
+    with set_backend(waterlevel="pallas"):
+        via_pallas = wf_jax.water_filling_jax_batch(probs)
+    for a, b in zip(via_jnp, via_pallas):
         assert a.alloc == b.alloc
         assert a.phi == b.phi
 
@@ -204,7 +211,8 @@ def test_chain_pallas_matches_sequential_host_admission(seed, n_jobs):
     m = 12
     base_busy = rng.integers(0, 10, m)
     probs = [_problem(rng, m=m, busy=base_busy) for _ in range(n_jobs)]
-    chained = wf_jax.water_filling_jax_chain(probs, use_pallas=True)
+    with set_backend(waterlevel="pallas"):
+        chained = wf_jax.water_filling_jax_chain(probs)
     busy = base_busy.copy()
     for prob, got in zip(probs, chained):
         seq = AssignmentProblem(busy=busy, mu=prob.mu, groups=prob.groups)

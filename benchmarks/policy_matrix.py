@@ -61,6 +61,7 @@ import numpy as np
 
 from repro import registry
 from repro.backend import set_backend
+from repro.obs import ObsSession
 from repro.runtime import SchedulingEngine, list_policies, make_policy
 from repro.traces import available_scenarios, generate
 
@@ -594,6 +595,9 @@ def run_online_sweep(
         ).run(jobs)
         plain_jct = None
         for mode, stealing, speculation in ONLINE_MODES:
+            # metrics-only session: steal/spec outcome accounting
+            # (attempted / won / cancelled) without trace overhead
+            cell_obs = ObsSession(trace=False, device=False)
             engine = SchedulingEngine(
                 n_servers,
                 make_policy("wf"),
@@ -601,6 +605,7 @@ def run_online_sweep(
                 step_mode="event",
                 stealing=stealing,
                 speculation=speculation,
+                obs=cell_obs,
             )
             t0 = time.perf_counter()
             res = engine.run(jobs)
@@ -625,6 +630,15 @@ def run_online_sweep(
                 "steals": res.steals,
                 "speculations": res.speculations,
                 "spec_cancels": res.spec_cancels,
+                # outcome accounting (obs metrics): attempts vs wins vs
+                # cancellations per mechanism, per sweep point
+                "steal_attempted": cell_obs.metrics.counter("steal.attempted"),
+                "steal_won": cell_obs.metrics.counter("steal.won"),
+                "spec_attempted": cell_obs.metrics.counter("spec.launched"),
+                "spec_won": cell_obs.metrics.counter("spec.won_clone"),
+                "spec_lost": cell_obs.metrics.counter("spec.won_original"),
+                "spec_cancelled": cell_obs.metrics.counter("spec.aborted")
+                + res.spec_cancels,
                 "makespan": res.makespan,
                 "wall_s": round(wall, 3),
             }

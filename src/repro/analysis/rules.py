@@ -630,6 +630,69 @@ class R007PerCallBackendChoice(Rule):
         self.generic_visit(node)
 
 
+# ---------------------------------------------------------------------------
+# R008 — print()/ad-hoc wall-clock timing outside the observability layer
+# ---------------------------------------------------------------------------
+
+
+class R008AdHocInstrumentation(Rule):
+    id = "R008"
+    title = "print()/ad-hoc wall-clock timing outside the observability layer"
+    rationale = (
+        "The observability satellite centralised runtime output and host "
+        "timing in repro.obs: a stray print() or time.perf_counter() in "
+        "the control plane is invisible to the trace/metrics artifacts, "
+        "skews tick-phase accounting, and tempts schedule-coupled "
+        "debugging. Record through the active ObsSession (metrics, trace "
+        "events, DeviceProfiler) and take wall-clock readings via "
+        "repro.obs.clock; CLIs, analyzers, and benchmarks are exempt."
+    )
+
+    # the observability layer itself, plus human-facing entry points that
+    # legitimately print and time: analyzers, launchers, and benchmarks
+    _ALLOWED_PREFIXES = (
+        "repro.obs",
+        "repro.analysis",
+        "repro.launch",
+        "benchmarks",
+    )
+    _TIMING = {
+        "time.time",
+        "time.time_ns",
+        "time.perf_counter",
+        "time.perf_counter_ns",
+        "time.monotonic",
+        "time.monotonic_ns",
+        "time.process_time",
+        "timeit.default_timer",
+    }
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        mod = self.ctx.module
+        for prefix in self._ALLOWED_PREFIXES:
+            if mod == prefix or mod.startswith(prefix + "."):
+                return []
+        return super().check(tree)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        qualname = self.ctx.qualname(node.func)
+        if qualname == "print":
+            self.report(
+                node,
+                "print() bypasses repro.obs — record a metric or trace "
+                "event on the active ObsSession, or move the output into "
+                "a benchmark/launch entry point",
+            )
+        elif qualname in self._TIMING:
+            self.report(
+                node,
+                f"ad-hoc {qualname}() bypasses the observability clock — "
+                f"use repro.obs.clock.perf_counter/us_since so host "
+                f"timing lands in tick-phase and dispatch histograms",
+            )
+        self.generic_visit(node)
+
+
 RULES: tuple[type[Rule], ...] = (
     R001AliasedMutableBuffer,
     R002EnvOutsideBackend,
@@ -638,6 +701,7 @@ RULES: tuple[type[Rule], ...] = (
     R005BusyStateWrite,
     R006RegistryBypass,
     R007PerCallBackendChoice,
+    R008AdHocInstrumentation,
 )
 
 

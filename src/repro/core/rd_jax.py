@@ -63,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.contracts import Interval, RangeClaim, choice, contract, span
+from repro.obs.session import device_profiler as _obs_device
 
 from .instance import Assignment, AssignmentProblem, TaskGroup
 from .rd import RD_DEVICE_MAX_M, replica_deletion
@@ -695,6 +696,8 @@ def replica_deletion_jax(
     )
     use_pallas, interpret = _resolve_device(backend, c_cap, a_pad)
     holders, size, cnt, grp, n0 = _dense_instance(problem, c_cap, a_pad)
+    prof = _obs_device()
+    t0 = prof.start() if prof is not None else 0.0
     size_f, cnt_f, grp_f, srv_f, overflow = _rd_device(
         jnp.asarray(problem.busy, jnp.int32),
         jnp.asarray(problem.mu, jnp.int32),
@@ -707,14 +710,17 @@ def replica_deletion_jax(
         interpret=interpret,
     )
     if bool(overflow):  # rare: slot heuristic exceeded — host re-run
+        if prof is not None:
+            prof.record(
+                "rd-device", (problem.n_servers, c_cap, a_pad), t0,
+                fallback=True,
+            )
         return replica_deletion(problem)
-    return _decode(
-        problem,
-        np.asarray(size_f),
-        np.asarray(cnt_f),
-        np.asarray(grp_f),
-        np.asarray(srv_f),
-    )
+    size_f, cnt_f = np.asarray(size_f), np.asarray(cnt_f)
+    grp_f, srv_f = np.asarray(grp_f), np.asarray(srv_f)
+    if prof is not None:  # past the host sync; sig = the kernelcheck key
+        prof.record("rd-device", (problem.n_servers, c_cap, a_pad), t0)
+    return _decode(problem, size_f, cnt_f, grp_f, srv_f)
 
 
 @contract(
@@ -800,6 +806,8 @@ def replica_deletion_jax_chain(
             p, c_cap, a_pad
         )
         mu[i] = p.mu
+    prof = _obs_device()
+    t0 = prof.start() if prof is not None else 0.0
     size_f, cnt_f, grp_f, srv_f, overflow = _rd_device_chain(
         jnp.asarray(base, jnp.int32),
         jnp.asarray(mu),
@@ -817,6 +825,10 @@ def replica_deletion_jax_chain(
         # assignments — that is the parity guarantee)
         from .rd import host_commit_walk
 
+        if prof is not None:
+            prof.record(
+                "rd-chain", (m, c_cap, a_pad, b_pad), t0, fallback=True
+            )
         return host_commit_walk(problems)
     from .reorder import commit_busy
 
@@ -824,6 +836,8 @@ def replica_deletion_jax_chain(
     cnt_f = np.asarray(cnt_f)
     grp_f = np.asarray(grp_f)
     srv_f = np.asarray(srv_f)
+    if prof is not None:  # past the host sync; sig = the kernelcheck key
+        prof.record("rd-chain", (m, c_cap, a_pad, b_pad), t0)
     busy = np.asarray(base)
     out: list[Assignment] = []
     for i, p in enumerate(problems):

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.contracts import choice, contract, span
+from repro.obs.session import device_profiler as _obs_device
 
 from .instance import Assignment, AssignmentProblem
 
@@ -498,15 +499,22 @@ def water_filling_jax(
     """
     if not problem.groups:
         return Assignment(alloc=[], phi=0)  # parity with host water_filling
-    busy, mu, masks, demands = _dense_inputs([problem], _pad_k(len(problem.groups)))
+    k_pad = _pad_k(len(problem.groups))
+    busy, mu, masks, demands = _dense_inputs([problem], k_pad)
+    # resolve before the jit boundary so the cache keys on the
+    # concrete backend (set_backend scopes stay effective per call)
+    up = _resolve_pallas(use_pallas, problem.n_servers)
+    prof = _obs_device()
+    t0 = prof.start() if prof is not None else 0.0
     alloc, _, phi = _wf_groups_jit(
         jnp.asarray(busy[0]), jnp.asarray(mu[0]),
         jnp.asarray(masks[0]), jnp.asarray(demands[0]),
-        # resolve before the jit boundary so the cache keys on the
-        # concrete backend (set_backend scopes stay effective per call)
-        use_pallas=_resolve_pallas(use_pallas, problem.n_servers),
+        use_pallas=up,
     )
-    return _to_assignment(problem, np.asarray(alloc), int(phi))
+    alloc, phi = np.asarray(alloc), int(phi)
+    if prof is not None:  # past the host sync; sig = the kernelcheck key
+        prof.record("wf-groups", (problem.n_servers, k_pad, up), t0)
+    return _to_assignment(problem, alloc, phi)
 
 
 @contract(
@@ -552,15 +560,19 @@ def water_filling_jax_batch(
         raise ValueError("batched WF requires a single cluster size")
     k_pad = _pad_k(max(len(p.groups) for p in problems))
     busy, mu, masks, demands = _dense_inputs(problems, k_pad)
+    # resolve before the jit boundary so the cache keys on the
+    # concrete backend (set_backend scopes stay effective per call)
+    up = _resolve_pallas(use_pallas, m)
+    prof = _obs_device()
+    t0 = prof.start() if prof is not None else 0.0
     alloc, _, phi = _wf_batch_jit(
         jnp.asarray(busy), jnp.asarray(mu), jnp.asarray(masks),
-        jnp.asarray(demands),
-        # resolve before the jit boundary so the cache keys on the
-        # concrete backend (set_backend scopes stay effective per call)
-        use_pallas=_resolve_pallas(use_pallas, m),
+        jnp.asarray(demands), use_pallas=up,
     )
     alloc = np.asarray(alloc)
     phi = np.asarray(phi)
+    if prof is not None:  # past the host sync; sig = the kernelcheck key
+        prof.record("wf-batch", (m, k_pad, up, len(problems)), t0)
     return [
         _to_assignment(p, alloc[i], int(phi[i])) for i, p in enumerate(problems)
     ]
@@ -624,12 +636,17 @@ def water_filling_jax_chain(
         mu = np.concatenate([mu, np.ones((pad, m), np.int32)])
         masks = np.concatenate([masks, np.zeros((pad, k_pad, m), bool)])
         demands = np.concatenate([demands, np.zeros((pad, k_pad), np.int32)])
+    up = _resolve_pallas(use_pallas, m)
+    prof = _obs_device()
+    t0 = prof.start() if prof is not None else 0.0
     alloc, phi, _ = _wf_chain_jit(
         jnp.asarray(busy[0]), jnp.asarray(mu), jnp.asarray(masks),
-        jnp.asarray(demands), use_pallas=_resolve_pallas(use_pallas, m),
+        jnp.asarray(demands), use_pallas=up,
     )
     alloc = np.asarray(alloc)
     phi = np.asarray(phi)
+    if prof is not None:  # past the host sync; sig = the kernelcheck key
+        prof.record("wf-chain", (m, k_pad, up, b_pad), t0)
     return [
         _to_assignment(p, alloc[i], int(phi[i])) for i, p in enumerate(problems)
     ]

@@ -1,0 +1,64 @@
+"""`repro.obs`: schedule-invariant observability for the control plane.
+
+Three surfaces, one session object:
+
+- **tracing** (:mod:`repro.obs.trace`) — typed span/instant events in a
+  ring buffer: job lifecycle with steal/speculation/reassignment
+  causality links, control-plane tick phases, placement churn, serve
+  spans, device dispatches.  Exports Chrome/Perfetto ``trace_event``
+  JSON and a columnar numpy table.
+- **metrics** (:mod:`repro.obs.metrics`) — counters, gauges, and
+  power-of-two histograms (queue depths, eq. 2 busy levels, locality
+  tiers, steal/spec win-loss accounting, serve latency), snapshotted
+  per tick at a configurable cadence.
+- **device profiling** (:class:`repro.obs.session.DeviceProfiler`) —
+  compile-vs-execute wall time and jit-cache hit/miss around the
+  ``wf_jax``/``rd_jax`` adapters, keyed by the kernelcheck signatures,
+  plus host-fallback counts.
+
+Everything hangs off :class:`ObsSession`, activated ambiently::
+
+    from repro import obs
+
+    with obs.observe() as session:
+        result = SchedulingEngine(...).run(jobs)
+    json.dump(session.trace.to_chrome_trace(), open("run.trace.json", "w"))
+
+The hard contract — proven by ``tests/test_obs.py`` and enforced by the
+hook design — is that observability **on ≡ off is schedule-identical**:
+hooks never mutate scheduler state, never touch jax or RNG, and wall
+time flows only *out* (reprolint R008 funnels every runtime clock read
+through :mod:`repro.obs.clock`).  This package imports only numpy and
+the stdlib.
+
+``python -m repro.obs.report`` runs a scenario under a session and
+emits the trace + metrics artifacts next to ``results/BENCH_*.json``.
+"""
+
+from __future__ import annotations
+
+from . import clock
+from .metrics import Histogram, Metrics
+from .session import (
+    DeviceProfiler,
+    ObsSession,
+    active,
+    device_profiler,
+    observe,
+)
+from .trace import KIND_NAMES, SLOT_US, TraceRecorder, parse_chrome_trace
+
+__all__ = [
+    "clock",
+    "Histogram",
+    "Metrics",
+    "DeviceProfiler",
+    "ObsSession",
+    "active",
+    "device_profiler",
+    "observe",
+    "KIND_NAMES",
+    "SLOT_US",
+    "TraceRecorder",
+    "parse_chrome_trace",
+]

@@ -1,0 +1,30 @@
+"""The one sanctioned wall-clock surface for `src/repro`.
+
+Every runtime layer that needs wall time — scheduling-overhead
+accounting in :class:`repro.runtime.engine.SchedulingEngine`, tick-phase
+spans in :class:`repro.runtime.loop.ControlPlane`, device-dispatch
+profiling in the ``wf_jax``/``rd_jax`` adapters — imports
+:func:`perf_counter` from here instead of :mod:`time`.  reprolint R008
+enforces the funnel: an ad-hoc ``time.perf_counter()``/``time.time()``
+call site in a runtime module bypasses the observability layer and is
+flagged.
+
+Wall time read through this module is *measurement only*: nothing in
+``repro.obs`` feeds a wall-clock value back into a scheduling decision,
+which is what keeps observability-on runs schedule-identical to
+observability-off runs.
+"""
+
+from __future__ import annotations
+
+import time
+
+__all__ = ["perf_counter", "us_since"]
+
+perf_counter = time.perf_counter
+
+
+def us_since(t0: float) -> int:
+    """Whole microseconds elapsed since ``t0`` (a :func:`perf_counter`
+    reading) — the host-time unit of trace events."""
+    return int((perf_counter() - t0) * 1e6)

@@ -34,6 +34,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import Job, TaskGroup
+from repro.obs.session import active as _obs_active
 
 __all__ = [
     "PlacementDelta",
@@ -295,6 +296,9 @@ class PlacementStore:
         reps.add(server)
         self.version += 1
         self.replicas_added += 1
+        obs = _obs_active()
+        if obs is not None:
+            obs.placement_event(obs.sim_now, "add", block, server)
         return True
 
     def evict(self, block: str, server: int) -> bool:
@@ -313,6 +317,9 @@ class PlacementStore:
         reps.discard(server)
         self.version += 1
         self.replicas_evicted += 1
+        obs = _obs_active()
+        if obs is not None:
+            obs.placement_event(obs.sim_now, "evict", block, server)
         return True
 
     def record_access(self, block: str, n: int = 1) -> None:
@@ -327,6 +334,9 @@ class PlacementStore:
         if not self._active[server]:
             self._active[server] = True
             self.version += 1
+            obs = _obs_active()
+            if obs is not None:
+                obs.placement_event(obs.sim_now, "join", "", server)
 
     def server_leave(self, server: int) -> list[str]:
         """Deactivate a server, evicting every replica it holds; returns
@@ -339,6 +349,11 @@ class PlacementStore:
         if self._active[server] or affected:
             self.version += 1
         self._active[server] = False
+        obs = _obs_active()
+        if obs is not None:
+            obs.placement_event(
+                obs.sim_now, "leave", f"{len(affected)} blocks", server
+            )
         return affected
 
     # ---- re-replication --------------------------------------------------

@@ -64,10 +64,18 @@ class ClusterState:
     ``⌈o_m^h/μ_m^h⌉`` slots — eq. 2 holds *by construction*.
     """
 
-    def __init__(self, n_servers: int, jobs: dict[int, Job], *, debug: bool = False):
+    def __init__(
+        self,
+        n_servers: int,
+        jobs: dict[int, Job],
+        *,
+        debug: bool = False,
+        obs=None,
+    ):
         self.n_servers = n_servers
         self.jobs = jobs
         self.debug = debug
+        self.obs = obs  # ObsSession | None; observation-only hooks
         self.queues: list[deque[QueueSegment]] = [deque() for _ in range(n_servers)]
         self.alive = np.ones(n_servers, dtype=bool)
         self.slow = np.ones(n_servers, dtype=np.float64)
@@ -217,6 +225,8 @@ class ClusterState:
     def mark_failed(self, job_id: int) -> None:
         if job_id not in self.failed:
             self.failed.append(job_id)
+            if self.obs is not None:
+                self.obs.job_failed(self.obs.sim_now, job_id)
         self.remaining.pop(job_id, None)
         # purge zombie segments so queues don't process unaccounted tasks
         for m, q in enumerate(self.queues):
@@ -237,11 +247,15 @@ class ClusterState:
                     continue
                 bucket = per_server.setdefault(m, {})
                 bucket[g] = bucket.get(g, 0) + cnt
+        obs = self.obs
+        job = self.jobs.get(job_id) if obs is not None else None
         for m, per_group in per_server.items():
             seg = QueueSegment(job_id, per_group)
             self.queues[m].append(seg)
             if not self._busy_stale and self.alive[m]:
                 self._busy[m] += self._segment_cost(seg, m)
+            if job is not None:
+                obs.enqueued(job, m, seg.per_group)
 
     def clear_queues(self) -> None:
         self.queues = [deque() for _ in range(self.n_servers)]

@@ -39,12 +39,13 @@ State lives in :class:`repro.runtime.cluster.ClusterState`; events in
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import numpy as np
 
 from repro.core import AssignmentProblem, Job, OutstandingJob, TaskGroup
+from repro.obs import clock
+from repro.obs.session import ObsSession, active as obs_active
 from repro.placement import PlacedJob, PlacementEvent, PlacementStore
 
 from .cluster import ClusterState
@@ -65,6 +66,9 @@ class SimResult:
     speculations: int = 0  # straggler fragments cloned (event mode)
     spec_cancels: int = 0  # speculative losers canceled (event mode)
     serve_latency: dict[int, int] = dataclasses.field(default_factory=dict)
+    # serve requests still in flight when the plane drained (their
+    # latencies are NOT in serve_latency — they never finished)
+    inflight_requests: int = 0
 
     @property
     def mean_jct(self) -> float:
@@ -113,6 +117,7 @@ class SchedulingEngine:
         stealing: bool = False,
         speculation: bool = False,
         spec_factor: float = 2.0,
+        obs: ObsSession | None = None,
     ):
         if step_mode not in ("slot", "event"):
             raise ValueError(
@@ -144,6 +149,7 @@ class SchedulingEngine:
         self.on_slot = on_slot  # observability/test hook, called once per slot
         self.debug = debug
         self.batch_arrivals = batch_arrivals
+        self.obs = obs if obs is not None else obs_active()
         self.cluster: ClusterState | None = None  # populated by run()
         # block -> [(job_id, original gid)] for arrived placement-backed jobs
         self._block_groups: dict[str, list[tuple[int, int]]] = {}
@@ -215,6 +221,10 @@ class SchedulingEngine:
                     assignment.validate(prob)
                 cluster.enqueue(job_id, assignment, gids)
                 cluster.reassigned += sum(per_group.values())
+                if self.obs is not None:
+                    self.obs.reassign(
+                        self.obs.sim_now, job_id, sum(per_group.values())
+                    )
         elif ev.kind == "recover":
             cluster.recover_server(m)
         elif ev.kind == "slowdown":
@@ -301,6 +311,10 @@ class SchedulingEngine:
                 assignment.validate(prob)
             cluster.enqueue(job_id, assignment, gids)
             cluster.reassigned += sum(per_group.values())
+            if self.obs is not None:
+                self.obs.reassign(
+                    self.obs.sim_now, job_id, sum(per_group.values())
+                )
 
     def _apply_placement_event(self, ev: PlacementEvent) -> None:
         store = self.placement
@@ -363,7 +377,7 @@ class SchedulingEngine:
             cluster.mark_failed(job.job_id)
             return None
         groups, gids = proj
-        t0 = time.perf_counter()
+        t0 = clock.perf_counter()
         if self.policy.reorders:
             self._reschedule(
                 [(
@@ -381,7 +395,10 @@ class SchedulingEngine:
             if self.debug:
                 assignment.validate(prob)
             cluster.enqueue(job.job_id, assignment, gids)
-        return time.perf_counter() - t0
+        elapsed = clock.perf_counter() - t0
+        if self.obs is not None:
+            self.obs.job_admitted(self.obs.sim_now, job.job_id, elapsed)
+        return elapsed
 
     def _project_batch(self, batch: list[Job]) -> list[tuple[Job, tuple, list[int]]]:
         """Project each burst job onto alive servers; jobs whose data is
@@ -430,7 +447,7 @@ class SchedulingEngine:
             return self._admit_burst_reorder(batch)
         if batch_fn is None:
             return [o for j in batch if (o := self._admit_one(j)) is not None]
-        t0 = time.perf_counter()
+        t0 = clock.perf_counter()
         admitted = self._project_batch(batch)
         if not admitted:
             return []
@@ -448,7 +465,12 @@ class SchedulingEngine:
             if self.debug:
                 assignment.validate(prob)
             cluster.enqueue(job.job_id, assignment, gids)
-        elapsed = time.perf_counter() - t0
+        elapsed = clock.perf_counter() - t0
+        if self.obs is not None:
+            for job, _, _ in admitted:
+                self.obs.job_admitted(
+                    self.obs.sim_now, job.job_id, elapsed / len(admitted)
+                )
         return [elapsed / len(admitted)] * len(admitted)
 
     def _admit_burst_reorder(self, batch: list[Job]) -> list[float]:
@@ -462,7 +484,7 @@ class SchedulingEngine:
         schedule-identical at 1/len(batch) of the rescan cost.
         """
         cluster = self.cluster
-        t0 = time.perf_counter()
+        t0 = clock.perf_counter()
         extras = [
             (
                 OutstandingJob(
@@ -477,7 +499,12 @@ class SchedulingEngine:
         if not extras:
             return []
         self._reschedule(extras)
-        elapsed = time.perf_counter() - t0
+        elapsed = clock.perf_counter() - t0
+        if self.obs is not None:
+            for extra, _ in extras:
+                self.obs.job_admitted(
+                    self.obs.sim_now, extra.job_id, elapsed / len(extras)
+                )
         return [elapsed / len(extras)] * len(extras)
 
     # ---- main loop -------------------------------------------------------
@@ -498,6 +525,7 @@ class SchedulingEngine:
                 on_slot=self.on_slot,
                 debug=self.debug,
                 batch_arrivals=self.batch_arrivals,
+                obs=self.obs,
             )
             plane.submit_many(jobs)
             result = plane.drain()
@@ -507,15 +535,21 @@ class SchedulingEngine:
 
     def _run_slot(self, jobs: list[Job]) -> SimResult:
         self.cluster = cluster = ClusterState(
-            self.n_servers, {j.job_id: j for j in jobs}, debug=self.debug
+            self.n_servers,
+            {j.job_id: j for j in jobs},
+            debug=self.debug,
+            obs=self.obs,
         )
         self._block_groups = {}
         timeline = EventTimeline(self.events)
         arrivals = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
         jct: dict[int, int] = {}
         overheads: list[float] = []
+        obs = self.obs
         ai = slot = 0
         while slot < self.max_slots:
+            if obs is not None:
+                obs.sim_now = slot
             for ev in timeline.due(slot):
                 if isinstance(ev, PlacementEvent):
                     self._apply_placement_event(ev)
@@ -525,8 +559,12 @@ class SchedulingEngine:
             while ai < len(arrivals) and arrivals[ai].arrival <= slot:
                 job = arrivals[ai]
                 ai += 1
+                if obs is not None:
+                    obs.job_arrival(slot, job.job_id, job.n_tasks)
                 if job.n_tasks == 0:
                     jct[job.job_id] = 0  # empty job completes at arrival
+                    if obs is not None:
+                        obs.job_complete(slot, job.job_id, job.arrival, 0, 0)
                     continue
                 batch.append(job)
             if batch:
@@ -534,12 +572,21 @@ class SchedulingEngine:
             for job_id, n_done in cluster.process_slot().items():
                 if job_id not in cluster.remaining:
                     continue
+                if obs is not None:
+                    obs.service_progress(slot, job_id, n_done)
                 cluster.remaining[job_id] -= n_done
                 if cluster.remaining[job_id] <= 0:
-                    jct[job_id] = slot + 1 - cluster.jobs[job_id].arrival
+                    job = cluster.jobs[job_id]
+                    jct[job_id] = slot + 1 - job.arrival
                     del cluster.remaining[job_id]
+                    if obs is not None:
+                        obs.job_complete(
+                            slot, job_id, job.arrival, jct[job_id], job.n_tasks
+                        )
             if self.on_slot is not None:
                 self.on_slot(cluster, slot)
+            if obs is not None:
+                obs.snapshot(slot, cluster)
             slot += 1
             if ai >= len(arrivals) and not cluster.remaining:
                 break

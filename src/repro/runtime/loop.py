@@ -56,6 +56,12 @@ from typing import Callable
 from repro import registry
 from repro.analysis import runtime as sanitizers
 from repro.core import Job
+from repro.obs import clock
+from repro.obs.session import (
+    SPEC_ABORTED,
+    ObsSession,
+    active as obs_active,
+)
 from repro.placement import PlacementEvent, PlacementStore
 
 from .cluster import ClusterState, QueueSegment
@@ -72,6 +78,9 @@ _P_REQUEST = 2  # serve-request routing
 _P_SERVICE = 3  # one ClusterState.process_slot
 _P_HEARTBEAT = 4  # router / serve-pool drain
 
+# tick-phase names for obs spans, indexed by priority
+_PHASE_NAMES = ("event", "arrival", "request", "service", "heartbeat")
+
 
 @dataclasses.dataclass
 class _SpecPair:
@@ -82,6 +91,7 @@ class _SpecPair:
     copies: list[tuple[int, QueueSegment, int]]  # (server, seg, shadow id)
     done: list[int]  # cumulative tasks per copy
     credited: int = 0  # progress already credited to the real job
+    obs_link: int = 0  # trace causality id binding launch to resolution
 
 
 class ControlPlane:
@@ -116,6 +126,7 @@ class ControlPlane:
         on_heartbeat: Callable[[int], None] | None = None,
         debug: bool = False,
         batch_arrivals: bool = True,
+        obs: ObsSession | None = None,
     ):
         scenario_jobs: list[Job] = []
         if scenario is not None:
@@ -139,6 +150,7 @@ class ControlPlane:
         # pytest --sanitize option) behave exactly like debug=True
         debug = debug or sanitizers.enabled()
         self.debug = debug
+        self.obs = obs if obs is not None else obs_active()
         # the engine is used for its admission / fault / placement
         # machinery only — the plane owns time, so the engine gets no
         # timeline of its own and its slot loop is never entered
@@ -149,8 +161,11 @@ class ControlPlane:
             max_slots=max_slots,
             debug=debug,
             batch_arrivals=batch_arrivals,
+            obs=self.obs,
         )
-        self.engine.cluster = ClusterState(n_servers, {}, debug=debug)
+        self.engine.cluster = ClusterState(
+            n_servers, {}, debug=debug, obs=self.obs
+        )
         self.n_servers = n_servers
         self.stealing = stealing
         self.speculation = speculation
@@ -206,6 +221,8 @@ class ControlPlane:
             cluster.remaining[job.job_id] = job.n_tasks
         self._push(t, _P_ARRIVAL, job)
         self._pending_arrivals += 1
+        if self.obs is not None:
+            self.obs.job_arrival(t, job.job_id, job.n_tasks)
         return t
 
     def submit_many(self, jobs: list[Job]) -> None:
@@ -279,6 +296,7 @@ class ControlPlane:
             speculations=self.speculations,
             spec_cancels=self.spec_cancels,
             serve_latency=self.serve_latency,
+            inflight_requests=len(self._submit_t),
         )
 
     # ---- event queue -----------------------------------------------------
@@ -298,6 +316,10 @@ class ControlPlane:
     def _pop_next(self) -> None:
         t, prio, _, payload = heapq.heappop(self._heap)
         self._now = max(self._now, t)
+        o = self.obs
+        if o is not None:
+            o.sim_now = t
+            t0 = clock.perf_counter()
         if prio == _P_EVENT:
             self._handle_cluster_event(t, payload)
         elif prio == _P_ARRIVAL:
@@ -313,6 +335,8 @@ class ControlPlane:
         else:
             self._heartbeat_pending = False
             self._handle_heartbeat(t)
+        if o is not None:
+            o.tick_phase(_PHASE_NAMES[prio], t0)
 
     def _ensure_service(self, t: int) -> None:
         if self._service_at is None:
@@ -347,6 +371,8 @@ class ControlPlane:
         for job in jobs:
             if job.n_tasks == 0:
                 self.jct[job.job_id] = 0  # empty job completes at arrival
+                if self.obs is not None:
+                    self.obs.job_complete(t, job.job_id, job.arrival, 0, 0)
                 if self.on_complete is not None:
                     self.on_complete(job.job_id, 0)
                 continue
@@ -358,6 +384,8 @@ class ControlPlane:
     def _handle_request(self, t: int, payload) -> None:
         rid, n_tokens, model, adapter, eligible, request = payload
         self._pending_requests -= 1
+        if self.obs is not None:
+            self.obs.serve_request(t, rid, n_tokens)
         if self.serve_pool is not None and request is not None:
             self.serve_pool.submit(
                 request, model=model, adapter=adapter, eligible=eligible
@@ -369,10 +397,13 @@ class ControlPlane:
             )
             # the request's tokens are last in each replica's queue: it
             # finishes when the slowest routed replica drains (eq. 2)
-            self.serve_latency[rid] = max(
+            latency = max(
                 -(-int(self.router.queued[m]) // int(self.router.rate[m]))
                 for m in out
             )
+            self.serve_latency[rid] = latency
+            if self.obs is not None:
+                self.obs.serve_done(t + latency, rid, latency)
         self._ensure_heartbeat(t + 1)
 
     def _handle_service(self, t: int) -> None:
@@ -399,14 +430,20 @@ class ControlPlane:
                 pair.credited = adv
             if adv >= pair.size:  # first finisher wins; cancel the other
                 self._close_pair(pair)
+        o = self.obs
         for job_id, n_done in done.items():
             if job_id not in cluster.remaining:
                 continue
+            if o is not None:
+                o.service_progress(t, job_id, n_done)
             cluster.remaining[job_id] -= n_done
             if cluster.remaining[job_id] <= 0:
-                jct = t + 1 - cluster.jobs[job_id].arrival
+                job = cluster.jobs[job_id]
+                jct = t + 1 - job.arrival
                 self.jct[job_id] = jct
                 del cluster.remaining[job_id]
+                if o is not None:
+                    o.job_complete(t, job_id, job.arrival, jct, job.n_tasks)
                 if self.on_complete is not None:
                     self.on_complete(job_id, jct)
         if self.on_slot is not None:
@@ -414,6 +451,8 @@ class ControlPlane:
         self._makespan = max(self._makespan, t + 1)
         if self.speculation:
             self._spec_scan()
+        if o is not None:
+            o.snapshot(t, cluster)
         if any(cluster.queues):
             self._ensure_service(t + 1)
 
@@ -422,7 +461,10 @@ class ControlPlane:
             for req in self.serve_pool.step():
                 rid = req.request_id
                 if rid in self._submit_t:
-                    self.serve_latency[rid] = t + 1 - self._submit_t.pop(rid)
+                    latency = t + 1 - self._submit_t.pop(rid)
+                    self.serve_latency[rid] = latency
+                    if self.obs is not None:
+                        self.obs.serve_done(t + 1, rid, latency)
         elif self.router is not None:
             self.router.drain()
         if self.on_heartbeat is not None:
@@ -463,6 +505,8 @@ class ControlPlane:
 
     def _steal_for(self, m: int, donors: list[int]) -> bool:
         cluster = self.engine.cluster
+        if self.obs is not None:
+            self.obs.steal_attempt(self._now, m)
         for p in donors:
             q = list(cluster.queues[p])
             if len(q) < 2:
@@ -497,6 +541,10 @@ class ControlPlane:
                 assignment.validate(prob)
             cluster.enqueue(victim.job_id, assignment, gids)
             self.steals += sum(merged.values())
+            if self.obs is not None:
+                self.obs.steal(
+                    self._now, victim.job_id, p, m, sum(merged.values())
+                )
             return True
         return False
 
@@ -563,6 +611,10 @@ class ControlPlane:
         self._specs[shadow_b] = (pair, 1)
         self._spec_jobs.add(pair.job_id)
         self.speculations += 1
+        if self.obs is not None:
+            pair.obs_link = self.obs.spec_launch(
+                self._now, pair.job_id, m, target
+            )
 
     def _close_pair(self, pair: _SpecPair) -> None:
         """First-finisher-wins resolution: cancel the laggard copy (its
@@ -570,6 +622,11 @@ class ControlPlane:
         fold the survivor back to the real job id."""
         cluster = self.engine.cluster
         winner = 0 if pair.done[0] >= pair.done[1] else 1
+        if self.obs is not None:
+            outcome = winner if max(pair.done) >= pair.size else SPEC_ABORTED
+            self.obs.spec_resolve(
+                self._now, pair.job_id, outcome, max(pair.done), pair.obs_link
+            )
         for ci, (server, seg, shadow) in enumerate(pair.copies):
             if seg.total > 0:
                 if ci == winner:

@@ -19,6 +19,8 @@ import numpy as np
 from repro.analysis import runtime as sanitizers
 from repro.core import AssignmentProblem, TaskGroup
 from repro.models import ModelConfig, decode_step, init_decode_cache, prefill
+from repro.obs.session import active as _obs_active
+from repro.obs.session import device_profiler as _obs_device
 from repro.runtime.policies import AssignFn, get_assigner
 
 __all__ = [
@@ -107,6 +109,8 @@ class ServeEngine:
         masked out of their caches by per-slot positions)."""
         tokens = np.zeros((len(self.slots), 1), np.int32)
         tokens[slot, 0] = token
+        prof = _obs_device()
+        t0 = prof.start() if prof is not None else 0.0
         logits, cache = self._decode(
             self.params, jnp.asarray(tokens), self._with_pos()
         )
@@ -114,6 +118,8 @@ class ServeEngine:
         self._pos[slot] += 1
         self.cache = cache
         nxt = int(np.asarray(logits[slot, 0]).argmax())
+        if prof is not None:  # past the host sync: honest dispatch wall time
+            prof.record("serve-decode", (len(self.slots),), t0)
         if self._guard is not None:  # sync point: dispatch completed above
             self._guard.verify()
         return nxt
@@ -139,11 +145,15 @@ class ServeEngine:
         tokens = np.zeros((len(self.slots), 1), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i]._last
+        prof = _obs_device()
+        t0 = prof.start() if prof is not None else 0.0
         logits, cache = self._decode(
             self.params, jnp.asarray(tokens), self._with_pos()
         )
         self.cache = cache
         nxt = np.asarray(logits[:, 0].argmax(axis=-1))
+        if prof is not None:  # past the host sync: honest dispatch wall time
+            prof.record("serve-decode", (len(self.slots),), t0)
         if self._guard is not None:  # sync point: dispatch completed above
             self._guard.verify()
         finished = []
@@ -252,6 +262,9 @@ class ReplicaRouter:
             for m, cnt in per.items():
                 self.queued[m] += cnt
                 out[m] = out.get(m, 0) + cnt
+        obs = _obs_active()
+        if obs is not None:
+            obs.serve_routed(len(out))
         return out
 
     def drain(self) -> None:

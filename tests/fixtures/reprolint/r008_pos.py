@@ -1,0 +1,19 @@
+"""R008 positive: print()/ad-hoc timing outside the observability layer."""
+
+import time
+from time import perf_counter
+
+
+def admit(job):
+    t0 = time.perf_counter()  # ad-hoc timing in the control plane
+    job.place()
+    elapsed = time.perf_counter() - t0
+    print("admitted", job.job_id, elapsed)  # stray debug output
+    return elapsed
+
+
+def heartbeat():
+    start = perf_counter()  # from-import alias still resolves to time.*
+    deadline = time.monotonic() + 5.0
+    print(f"heartbeat at {time.time()}")
+    return start, deadline

@@ -1,0 +1,392 @@
+"""repro.obs: trace ring buffer, Chrome round-trip, metrics, device
+profiling — and the load-bearing contract that observability on is
+schedule-identical to observability off.
+
+The equivalence half runs the same trace through ``SchedulingEngine`` /
+``ControlPlane`` with and without an active :class:`ObsSession` and
+requires the ``SimResult`` to be bit-identical (JCT map, makespan,
+steals, speculation accounting, failures).  CI re-runs this file under
+``--sanitize`` so the hooks also survive the armed runtime sanitizers.
+The Chrome-export half pins the acceptance artifact: a valid
+``trace_event`` JSON containing at least one complete job-lifecycle span
+and a steal/speculation causality flow pair.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.traces  # noqa: F401  (registers the scenario registry)
+from repro import obs
+from repro.core import AssignmentProblem, TaskGroup
+from repro.obs import Histogram, Metrics, TraceRecorder, parse_chrome_trace
+from repro.obs import trace as trace_mod
+from repro.obs.session import (
+    SPEC_CLONE_WON,
+    DeviceProfiler,
+    ObsSession,
+    active,
+)
+from repro.runtime import ControlPlane, SchedulingEngine, make_policy
+from repro.traces import generate
+
+# ---- ring buffer ------------------------------------------------------------
+
+
+def test_ring_buffer_overwrites_oldest():
+    rec = TraceRecorder(capacity=8)
+    for i in range(12):
+        rec.record(trace_mod.INST_ARRIVAL, ts=i, a=i)
+    assert len(rec) == 8
+    assert rec.total == 12
+    assert rec.dropped == 4
+    # oldest-first order, with the first 4 rows overwritten
+    assert [r[1] for r in rec.records()] == list(range(4, 12))
+
+
+def test_ring_buffer_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        TraceRecorder(capacity=0)
+
+
+def test_intern_is_stable():
+    rec = TraceRecorder(capacity=4)
+    a = rec.intern("wf-groups")
+    b = rec.intern("rd-device")
+    assert rec.intern("wf-groups") == a != b
+    assert rec.strings == ("wf-groups", "rd-device")
+
+
+def test_to_table_matches_records():
+    rec = TraceRecorder(capacity=16)
+    rec.record(trace_mod.SPAN_JOB, ts=3, dur=7, a=1, c=5)
+    rec.record(trace_mod.INST_STEAL, ts=4, dur=2, a=1, b=0, c=3, link=1)
+    table = rec.to_table()
+    assert list(table["ts"]) == [3, 4]
+    assert list(table["kind"]) == [trace_mod.SPAN_JOB, trace_mod.INST_STEAL]
+    assert table["strings"].size == 0
+
+
+# ---- Chrome trace_event export ---------------------------------------------
+
+
+def _synthetic_recorder() -> TraceRecorder:
+    """One of every kind, with a steal link and a matched spec pair."""
+    rec = TraceRecorder(capacity=64)
+    rec.record(trace_mod.INST_ARRIVAL, ts=0, a=1, c=4)
+    rec.record(trace_mod.INST_ADMIT, ts=0, a=1, c=1200)
+    rec.record(trace_mod.INST_FIRST_SERVICE, ts=1, a=1)
+    rec.record(trace_mod.INST_STEAL, ts=2, dur=3, a=1, b=0, c=2, link=1)
+    rec.record(trace_mod.INST_SPEC_LAUNCH, ts=3, a=1, b=0, c=2, link=2)
+    rec.record(
+        trace_mod.INST_SPEC_RESOLVE, ts=5, a=1, b=SPEC_CLONE_WON, c=4, link=2
+    )
+    rec.record(trace_mod.INST_REASSIGN, ts=5, a=1, c=1)
+    rec.record(trace_mod.SPAN_JOB, ts=0, dur=6, a=1, c=4)
+    rec.record(trace_mod.INST_FAILED, ts=6, a=2)
+    rec.record(trace_mod.SPAN_SERVE, ts=1, dur=2, a=9, c=40)
+    rec.record(
+        trace_mod.INST_PLACEMENT, ts=4, a=rec.intern("evict:blk0"), b=3
+    )
+    rec.record(trace_mod.SPAN_TICK, ts=100, dur=50, a=rec.intern("service"))
+    rec.record(
+        trace_mod.INST_DEVICE, ts=200, dur=30, a=rec.intern("wf-groups"), b=1, c=30
+    )
+    return rec
+
+
+def test_chrome_trace_round_trips_through_json():
+    rec = _synthetic_recorder()
+    payload = json.loads(json.dumps(rec.to_chrome_trace()))
+    records, strings = parse_chrome_trace(payload)
+    assert records == rec.records()
+    assert tuple(strings) == rec.strings
+
+
+def test_chrome_trace_shape_is_valid():
+    rec = _synthetic_recorder()
+    chrome = rec.to_chrome_trace()
+    events = chrome["traceEvents"]
+    for ev in events:
+        assert ev["ph"] in {"M", "X", "i", "s", "f"}
+        assert "pid" in ev and "name" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 1 and ev["ts"] >= 0
+    # the job lifecycle renders as a complete span at slot granularity
+    job_spans = [
+        e for e in events if e["ph"] == "X" and e.get("cat") == "job"
+    ]
+    assert len(job_spans) == 1
+    assert job_spans[0]["ts"] == 0
+    assert job_spans[0]["dur"] == 6 * trace_mod.SLOT_US
+    # steal and spec causality render as matched s/f flow pairs
+    for cat in ("steal", "spec"):
+        starts = [e for e in events if e["ph"] == "s" and e["cat"] == cat]
+        ends = [e for e in events if e["ph"] == "f" and e["cat"] == cat]
+        assert len(starts) == 1 and len(ends) == 1
+        assert starts[0]["id"] == ends[0]["id"]
+    # the device dispatch decodes its flag bits
+    device = [e for e in events if e.get("cat") == "device"]
+    assert device[0]["args"]["cache_miss"] is True
+    assert device[0]["args"]["host_fallback"] is False
+
+
+def test_parse_accepts_bare_event_list():
+    rec = _synthetic_recorder()
+    events = rec.to_chrome_trace()["traceEvents"]
+    records, strings = parse_chrome_trace(events)
+    assert records == rec.records()
+    assert strings == []
+
+
+# ---- metrics ----------------------------------------------------------------
+
+
+def test_histogram_buckets_and_quantiles():
+    h = Histogram()
+    for v in (0, 1, 1, 3, 100):
+        h.observe(v)
+    assert h.count == 5
+    assert h.max == 100
+    assert h.mean == pytest.approx(21.0)
+    assert h.quantile(0.0) == 0
+    assert h.quantile(0.5) == 1  # bucket upper bound containing the median
+    assert h.quantile(1.0) >= 100  # p100 covers the max sample's bucket
+    s = h.summary()
+    assert s["count"] == 5.0 and s["max"] == 100.0
+
+
+def test_histogram_clamps_negative_values():
+    h = Histogram()
+    h.observe(-5)
+    assert h.count == 1 and h.max == 0 and h.total == 0
+
+
+def test_metrics_snapshot_table_and_npz(tmp_path):
+    m = Metrics()
+    m.inc("jobs.arrived")
+    m.set_gauge("queue.segments", 3.0)
+    m.observe("jobs.jct_slots", 12)
+    m.snapshot(5)
+    m.inc("jobs.arrived", 2)
+    m.set_gauge("queue.segments", 1.0)
+    m.snapshot(9)
+    table = m.to_table()
+    assert list(table["tick"]) == [5, 9]
+    assert list(table["gauge.queue.segments"]) == [3.0, 1.0]
+    assert list(table["counter.jobs.arrived"]) == [1.0, 3.0]
+    assert table["hist.jobs.jct_slots.count"][0] == 1.0
+    path = tmp_path / "metrics.npz"
+    m.save_npz(str(path))
+    loaded = np.load(path)
+    assert set(loaded.files) == set(table)
+    np.testing.assert_array_equal(loaded["tick"], table["tick"])
+
+
+def _n_servers(jobs) -> int:
+    return 1 + max(max(g.servers) for j in jobs for g in j.groups)
+
+
+def test_snapshot_cadence_respects_metrics_every():
+    jobs = generate("bursty", n_jobs=25, seed=3)
+    n = _n_servers(jobs)
+    with obs.observe(trace=False, device=False, metrics_every=1) as dense:
+        SchedulingEngine(n, make_policy("wf")).run(jobs)
+    with obs.observe(trace=False, device=False, metrics_every=8) as sparse:
+        SchedulingEngine(n, make_policy("wf")).run(jobs)
+    assert dense.metrics.n_snapshots > sparse.metrics.n_snapshots > 0
+
+
+# ---- device profiler --------------------------------------------------------
+
+
+def test_device_profiler_splits_compile_and_exec():
+    s = ObsSession()
+    prof = s.device
+    sig = (16, 32, 1)
+    for _ in range(3):
+        prof.record("wf-groups", sig, prof.start())
+    prof.record("rd-device", (8, 4, 2), prof.start(), fallback=True)
+    m = s.metrics
+    assert m.counter("device.wf-groups.calls") == 3
+    assert m.counter("device.wf-groups.compiles") == 1
+    assert m.histogram("device.wf-groups.compile_us").count == 1
+    assert m.histogram("device.wf-groups.exec_us").count == 2
+    assert m.counter("device.rd-device.host_fallback") == 1
+    device_events = [
+        r for r in s.trace.records() if r[0] == trace_mod.INST_DEVICE
+    ]
+    assert len(device_events) == 4
+    assert device_events[0][4] & 1  # first wf-groups call is a cache miss
+    assert not (device_events[2][4] & 1)  # third hits the jit cache
+    assert device_events[3][4] & 2  # the rd fallback is flagged
+
+
+def test_wf_jax_dispatch_is_profiled():
+    prob = AssignmentProblem(
+        busy=np.zeros(4, dtype=np.int64),
+        mu=np.ones(4, dtype=np.int64),
+        groups=(TaskGroup(size=3, servers=(0, 1)),),
+    )
+    from repro.core.wf_jax import water_filling_jax
+
+    baseline = water_filling_jax(prob)  # outside any session: no profiling
+    with obs.observe() as s:
+        profiled = water_filling_jax(prob)
+    assert profiled.alloc == baseline.alloc and profiled.phi == baseline.phi
+    assert s.metrics.counter("device.wf-groups.calls") == 1
+
+
+# ---- schedule invariance (the contract) ------------------------------------
+
+
+def _result_key(res):
+    return (
+        dict(res.jct),
+        res.makespan,
+        sorted(res.failed_jobs),
+        res.reassignments,
+        res.steals,
+        res.speculations,
+        res.spec_cancels,
+        dict(res.serve_latency),
+        res.inflight_requests,
+    )
+
+
+@pytest.mark.parametrize(
+    "scenario,ordering",
+    [("bursty", "fifo"), ("bursty", "setf"), ("alibaba", "fifo")],
+)
+def test_observed_engine_run_is_schedule_identical(scenario, ordering):
+    jobs = generate(scenario, n_jobs=30, seed=7)
+    n = _n_servers(jobs)
+    plain = SchedulingEngine(n, make_policy("wf", ordering)).run(jobs)
+    with obs.observe() as s:
+        observed = SchedulingEngine(n, make_policy("wf", ordering)).run(jobs)
+    assert _result_key(observed) == _result_key(plain)
+    assert s.metrics.counter("jobs.arrived") == len(jobs)
+    assert s.metrics.counter("jobs.completed") == len(plain.jct)
+
+
+def test_observed_online_plane_is_schedule_identical():
+    kw = dict(
+        scenario="bursty",
+        scenario_kw={"n_jobs": 100, "seed": 0},
+        stealing=True,
+        speculation=True,
+    )
+    plain = ControlPlane(**kw).drain()
+    with obs.observe() as s:
+        observed = ControlPlane(**kw).drain()
+    assert _result_key(observed) == _result_key(plain)
+    # the run exercised the online mechanisms, not just the hooks
+    assert s.metrics.counter("steal.won") > 0
+    assert s.metrics.counter("spec.launched") > 0
+    spec_outcomes = (
+        s.metrics.counter("spec.won_clone")
+        + s.metrics.counter("spec.won_original")
+        + s.metrics.counter("spec.aborted")
+    )
+    assert spec_outcomes == s.metrics.counter("spec.launched")
+
+
+def test_acceptance_trace_has_lifecycle_span_and_causality_link():
+    """The ISSUE acceptance artifact: the exported bursty trace is valid
+    Chrome trace_event JSON with a complete job-lifecycle span and a
+    steal/speculation flow pair, and survives a full json round trip."""
+    with obs.observe() as s:
+        ControlPlane(
+            scenario="bursty",
+            scenario_kw={"n_jobs": 100, "seed": 0},
+            stealing=True,
+            speculation=True,
+        ).drain()
+    payload = json.loads(json.dumps(s.trace.to_chrome_trace()))
+    events = payload["traceEvents"]
+    job_spans = [
+        e for e in events if e["ph"] == "X" and e.get("cat") == "job"
+    ]
+    assert job_spans, "no complete job-lifecycle span in the trace"
+    flow_ids = {
+        (e["cat"], e["id"]) for e in events if e["ph"] == "s"
+    } & {(e["cat"], e["id"]) for e in events if e["ph"] == "f"}
+    assert flow_ids, "no steal/spec causality flow pair in the trace"
+    records, strings = parse_chrome_trace(payload)
+    assert records == s.trace.records()
+    assert tuple(strings) == s.trace.strings
+
+
+def test_trace_ring_wrap_keeps_run_schedule_identical():
+    kw = dict(scenario="bursty", scenario_kw={"n_jobs": 30, "seed": 5})
+    plain = ControlPlane(**kw).drain()
+    with obs.observe(trace_capacity=32) as s:
+        wrapped = ControlPlane(**kw).drain()
+    assert _result_key(wrapped) == _result_key(plain)
+    assert s.trace.dropped > 0
+    assert len(s.trace) == 32
+
+
+# ---- serve + inflight accounting -------------------------------------------
+
+
+class _SlowPool:
+    """Serve-pool stub whose single request finishes on the Nth heartbeat."""
+
+    router = None
+
+    def __init__(self, finish_after: int):
+        self.finish_after = finish_after
+        self.steps = 0
+        self.pending = []
+
+    def submit(self, request, *, model=None, adapter=None, eligible=None):
+        self.pending.append(request)
+        return 0
+
+    def step(self):
+        self.steps += 1
+        if self.steps >= self.finish_after and self.pending:
+            return [self.pending.pop()]
+        return []
+
+    def busy(self):
+        return bool(self.pending)
+
+
+class _Req:
+    def __init__(self, rid):
+        self.request_id = rid
+
+
+def test_inflight_requests_surfaced_on_result():
+    with obs.observe() as s:
+        plane = ControlPlane(4, policy="wf", serve_pool=_SlowPool(3))
+        plane.submit_request(8, at=0, request=_Req(7))
+        plane.step_until(1)
+        assert plane.result().inflight_requests == 1
+        res = plane.drain()
+    assert res.inflight_requests == 0
+    # heartbeats tick at t=1,2,3; the 3rd finishes the request at t+1=4
+    assert res.serve_latency[7] == 4
+    assert s.metrics.counter("serve.requests") == 1
+    assert s.metrics.counter("serve.completed") == 1
+    serve_spans = [
+        r for r in s.trace.records() if r[0] == trace_mod.SPAN_SERVE
+    ]
+    assert len(serve_spans) == 1
+    assert serve_spans[0][2] == 4  # dur carries the latency in slots
+
+
+# ---- ambient activation -----------------------------------------------------
+
+
+def test_observe_scopes_nest_and_clear():
+    assert active() is None
+    with obs.observe(trace=False, device=False) as outer:
+        assert active() is outer
+        with obs.observe(trace=False, device=False) as inner:
+            assert active() is inner
+        assert active() is outer
+    assert active() is None

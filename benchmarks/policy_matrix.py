@@ -80,6 +80,10 @@ ONLINE_MODES = (  # {stealing, speculation} grid over the event loop
     ("spec", False, True),
     ("steal+spec", True, True),
 )
+# sustained-overload utilisations: more work offered per slot than the
+# cluster can serve; run with admission control on, where load shedding
+# keeps the event heap bounded
+ONLINE_OVERLOAD_RHO = (1.1, 1.5)
 
 WATERLEVEL_MS = (64, 512, 4096, 16384)
 
@@ -554,12 +558,21 @@ def run_online_sweep(
     online mechanisms have something to react to.  Each QPS point runs
     the {stealing, speculation} grid; the ``plain`` cell doubles as an
     equivalence probe — it is asserted schedule-identical to the slot-
-    stepped loop on the same re-timed trace.  The payload lands in
-    ``results/<out_json>`` (uploaded by nightly CI) with per-cell mean
-    JCT, steal/speculation counts, and the delta vs the plain loop.
+    stepped loop on the same re-timed trace.
+
+    On top of the QPS axis, ``ONLINE_OVERLOAD_RHO`` adds sustained-
+    overload points (ρ > 1) run with admission control on: those cells
+    record shed counts, peak deferred-queue depth, and peak event-heap
+    size, and the heap peak is asserted bounded by the submitted work
+    (the whole point of shedding at ρ > 1).  The slot-loop equivalence
+    probe is skipped there — admission is an event-loop-only mechanism.
+
+    The payload lands in ``results/<out_json>`` (uploaded by nightly
+    CI) with per-cell mean JCT, steal/speculation counts, overload
+    accounting, and the delta vs the plain loop.
     """
-    from repro.runtime import ServerEvent
-    from repro.traces import replay_client
+    from repro.runtime import ResilienceConfig, ServerEvent
+    from repro.traces import replay_client, saturation_qps
 
     if smoke:
         trace_kw = dict(n_jobs=25, total_tasks=4_000, n_servers=25, seed=5)
@@ -570,13 +583,25 @@ def run_online_sweep(
     # saturation point: offered load ρ = qps·E[tasks/job] / (M·E[μ]).
     # ρ→1 is where queueing explodes and P99 separates the mechanisms;
     # the plain≡slot equivalence assertion below covers this point too.
-    mean_mu = float(np.mean([j.mu.mean() for j in base]))
-    mean_tasks = float(np.mean([j.n_tasks for j in base]))
-    qps_sat = round(0.95 * n_servers * mean_mu / mean_tasks, 4)
+    qps_one = saturation_qps(base, n_servers)
+    qps_sat = round(0.95 * qps_one, 4)
     qps_points = tuple(qps_points) + (qps_sat,)
 
     def rho(qps: float) -> float:
-        return qps * mean_tasks / (n_servers * mean_mu)
+        return qps / qps_one
+
+    # overload cells: shed early enough that the finite bench trace
+    # actually exercises the defer -> shed ladder (the library defaults
+    # in ResilienceConfig are sized for long-running planes)
+    overload_cfg = ResilienceConfig(
+        admission=True,
+        lag_defer_budget=8,
+        lag_shed_budget=24,
+        defer_queue_cap=16,
+    )
+    points = [(qps, None) for qps in qps_points] + [
+        (round(r * qps_one, 4), overload_cfg) for r in ONLINE_OVERLOAD_RHO
+    ]
     # rotating stragglers: every 30 slots another server runs 6x slow
     # for 20 slots — the regime where idle-edge mechanisms pay off
     events = tuple(
@@ -588,11 +613,12 @@ def run_online_sweep(
     )
 
     rows: list[dict] = []
-    for qps in qps_points:
+    for qps, res_cfg in points:
         jobs = replay_client(base, qps=qps)
-        slot_res = SchedulingEngine(
-            n_servers, make_policy("wf"), events=events
-        ).run(jobs)
+        if res_cfg is None:
+            slot_res = SchedulingEngine(
+                n_servers, make_policy("wf"), events=events
+            ).run(jobs)
         plain_jct = None
         for mode, stealing, speculation in ONLINE_MODES:
             # metrics-only session: steal/spec outcome accounting
@@ -605,12 +631,13 @@ def run_online_sweep(
                 step_mode="event",
                 stealing=stealing,
                 speculation=speculation,
+                resilience=res_cfg,
                 obs=cell_obs,
             )
             t0 = time.perf_counter()
             res = engine.run(jobs)
             wall = time.perf_counter() - t0
-            if mode == "plain":
+            if mode == "plain" and res_cfg is None:
                 if (
                     res.jct != slot_res.jct
                     or res.makespan != slot_res.makespan
@@ -619,11 +646,23 @@ def run_online_sweep(
                         f"online sweep: event loop diverged from slot loop "
                         f"at qps={qps}"
                     )
+            if mode == "plain":
                 plain_jct = res.mean_jct
+            if res_cfg is not None:
+                # the bounded-heap contract shedding exists to uphold:
+                # the timeline never exceeds the submitted work
+                bound = len(jobs) + len(events) + 16
+                if res.heap_peak > bound:
+                    raise AssertionError(
+                        f"online sweep: event heap peaked at "
+                        f"{res.heap_peak} > bound {bound} under overload "
+                        f"qps={qps}"
+                    )
             row = {
                 "qps": qps,
                 "rho": round(rho(qps), 3),
                 "mode": mode,
+                "admission": res_cfg is not None,
                 "mean_jct": round(res.mean_jct, 3),
                 "p99_jct": round(res.jct_percentile(99), 3),
                 "jct_vs_plain": round(res.mean_jct - plain_jct, 3),
@@ -639,6 +678,12 @@ def run_online_sweep(
                 "spec_lost": cell_obs.metrics.counter("spec.won_original"),
                 "spec_cancelled": cell_obs.metrics.counter("spec.aborted")
                 + res.spec_cancels,
+                # overload accounting (all-zero on the admission-off
+                # points): dropped jobs, pending-queue high-water mark,
+                # and the event-heap high-water mark the bound checks
+                "shed": res.n_shed,
+                "deferred_peak": res.deferred_peak,
+                "heap_peak": res.heap_peak,
                 "makespan": res.makespan,
                 "wall_s": round(wall, 3),
             }
@@ -647,8 +692,9 @@ def run_online_sweep(
     payload = {
         "scenario": "bursty+rotating-stragglers",
         "trace_kw": trace_kw,
-        "qps_points": list(qps_points),
+        "qps_points": [q for q, _ in points],
         "qps_sat": qps_sat,
+        "overload_rho": list(ONLINE_OVERLOAD_RHO),
         "sweep": rows,
     }
     path = os.path.join(RESULTS_DIR, out_json)

@@ -693,6 +693,156 @@ class R008AdHocInstrumentation(Rule):
         self.generic_visit(node)
 
 
+class R009ScatteredResilienceThreshold(Rule):
+    id = "R009"
+    title = "resilience threshold literal outside ResilienceConfig"
+    rationale = (
+        "The overload-hardening satellite centralised every lag budget, "
+        "speculation cap, steal gain, backoff base, and retry limit in "
+        "repro.runtime.resilience.ResilienceConfig. A numeric literal "
+        "compared against, combined with, or assigned to a lag/backoff/"
+        "retry/shed/defer/spec/steal-named value anywhere else recreates "
+        "the scattered-magic-number state the refactor removed: two "
+        "mechanisms drift apart and ResilienceConfig stops describing "
+        "the plane's actual behavior. Thread the value through a "
+        "ResilienceConfig field (constructing a config with explicit "
+        "keyword values is fine — that is the sanctioned API)."
+    )
+
+    # the config itself, plus the analysis layer (this linter and the
+    # runtime sanitizers reason about thresholds without owning any)
+    _ALLOWED_MODULES = {"repro.runtime.resilience"}
+    _ALLOWED_PREFIXES = ("repro.analysis",)
+    # exact snake_case tokens; "steals"/"retries"/"speculations" (result
+    # counters) deliberately do not match
+    _VOCAB = {
+        "lag",
+        "backoff",
+        "retry",
+        "shed",
+        "defer",
+        "deferred",
+        "spec",
+        "steal",
+    }
+    # structural zero/unit/sentinel values are not tunables
+    _EXEMPT = {0, 1, -1}
+
+    def check(self, tree: ast.Module) -> list[Violation]:
+        mod = self.ctx.module
+        if mod in self._ALLOWED_MODULES:
+            return []
+        for prefix in self._ALLOWED_PREFIXES:
+            if mod == prefix or mod.startswith(prefix + "."):
+                return []
+        return super().check(tree)
+
+    def _vocab_name(self, node: ast.AST) -> str | None:
+        if isinstance(node, ast.Name):
+            name = node.id
+        elif isinstance(node, ast.Attribute):
+            name = node.attr
+        else:
+            return None
+        if self._VOCAB & set(name.lower().split("_")):
+            return name
+        return None
+
+    def _threshold_const(self, node: ast.AST):
+        """Value of a plain (possibly negated) int/float literal outside
+        the structural exemptions; None for everything else."""
+        neg = False
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            node, neg = node.operand, True
+        if not isinstance(node, ast.Constant):
+            return None
+        v = node.value
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            return None
+        v = -v if neg else v
+        if v in self._EXEMPT:
+            return None
+        return v
+
+    def _flag(self, node: ast.AST, name: str, value) -> None:
+        self.report(
+            node,
+            f"literal {value!r} tunes resilience value {name!r} here — "
+            f"thresholds belong on a repro.runtime.resilience."
+            f"ResilienceConfig field",
+        )
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        operands = [node.left, *node.comparators]
+        names = [n for n in map(self._vocab_name, operands) if n]
+        consts = [
+            v for v in map(self._threshold_const, operands) if v is not None
+        ]
+        if names and consts:
+            self._flag(node, names[0], consts[0])
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        for a, b in ((node.left, node.right), (node.right, node.left)):
+            name = self._vocab_name(a)
+            if name is None:
+                continue
+            v = self._threshold_const(b)
+            if v is not None:
+                self._flag(node, name, v)
+                break
+        self.generic_visit(node)
+
+    def _check_defaults(self, node) -> None:
+        a = node.args
+        pos = a.posonlyargs + a.args
+        for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+            self._check_one_default(arg, default)
+        for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+            if default is not None:
+                self._check_one_default(arg, default)
+
+    def _check_one_default(self, arg: ast.arg, default: ast.AST) -> None:
+        if self._vocab_name(ast.Name(id=arg.arg)) is None:
+            return
+        v = self._threshold_const(default)
+        if v is not None:
+            self._flag(default, arg.arg, v)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    def _check_bind(self, target: ast.AST, value: ast.AST | None) -> None:
+        if value is None:
+            return
+        name = self._vocab_name(target)
+        # ALL_CAPS assignments are named-constant *definitions* (e.g.
+        # trace instruction codes), not scattered tunables
+        if name is None or name.isupper():
+            return
+        v = self._threshold_const(value)
+        if v is not None:
+            self._flag(value, name, v)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for target in node.targets:
+            self._check_bind(target, node.value)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self._check_bind(node.target, node.value)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_bind(node.target, node.value)
+        self.generic_visit(node)
+
+
 RULES: tuple[type[Rule], ...] = (
     R001AliasedMutableBuffer,
     R002EnvOutsideBackend,
@@ -702,6 +852,7 @@ RULES: tuple[type[Rule], ...] = (
     R006RegistryBypass,
     R007PerCallBackendChoice,
     R008AdHocInstrumentation,
+    R009ScatteredResilienceThreshold,
 )
 
 

@@ -187,6 +187,17 @@ class ObsSession:
         if self.trace is not None:
             self.trace.record(INST_FAILED, ts=t, a=job_id)
 
+    # admission / retry outcomes are counters only — no trace kind, so
+    # existing trace consumers and the chrome export stay untouched
+    def job_deferred(self, t: int, job_id: int) -> None:
+        self.metrics.inc("jobs.deferred")
+
+    def job_shed(self, t: int, job_id: int) -> None:
+        self.metrics.inc("jobs.shed")
+
+    def job_retry(self, t: int, job_id: int) -> None:
+        self.metrics.inc("jobs.retried")
+
     # ---- control-plane phases -------------------------------------------
 
     def tick_phase(self, name: str, t0: float) -> None:

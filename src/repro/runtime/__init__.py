@@ -8,8 +8,9 @@ cluster (queues + eq. 2 busy state) → events (fault timeline).
 
 from .cluster import ClusterState, QueueSegment
 from .engine import SchedulingEngine, SimResult
-from .events import EventTimeline, ServerEvent
+from .events import EventTimeline, RackEvent, ServerEvent
 from .loop import ControlPlane
+from .resilience import ResilienceConfig, ResilienceState
 from .policies import (
     ORDERINGS,
     Policy,
@@ -28,6 +29,9 @@ __all__ = [
     "ORDERINGS",
     "Policy",
     "QueueSegment",
+    "RackEvent",
+    "ResilienceConfig",
+    "ResilienceState",
     "SchedulingEngine",
     "SchedulingPolicy",
     "ServerEvent",

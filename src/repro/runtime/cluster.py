@@ -85,6 +85,12 @@ class ClusterState:
         self._mu_cache: dict[int, np.ndarray] = {}
         self._busy = np.zeros(n_servers, dtype=np.int64)
         self._busy_stale = False
+        # per-tick service observation (read-only for consumers): tasks
+        # the last process_slot took per server, and the head job they
+        # were taken from — valid only where last_progress > 0, which
+        # sidesteps any idle-sentinel collision with negative shadow ids
+        self.last_progress = np.zeros(n_servers, dtype=np.int64)
+        self.last_head_job = np.zeros(n_servers, dtype=np.int64)
 
     # ---- capacity & busy time -------------------------------------------
 
@@ -317,6 +323,7 @@ class ClusterState:
     def process_slot(self) -> dict[int, int]:
         """One slot of head-of-queue service; returns tasks completed per job."""
         done: dict[int, int] = {}
+        self.last_progress.fill(0)
         for m in range(self.n_servers):
             if not self.alive[m] or not self.queues[m]:
                 continue
@@ -330,6 +337,8 @@ class ClusterState:
                 self.queues[m].popleft()
             if taken:
                 done[seg.job_id] = done.get(seg.job_id, 0) + taken
+                self.last_progress[m] = taken
+                self.last_head_job[m] = seg.job_id
         return done
 
     # ---- invariant check (test hook) ------------------------------------

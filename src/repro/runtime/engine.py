@@ -49,14 +49,21 @@ from repro.obs.session import ObsSession, active as obs_active
 from repro.placement import PlacedJob, PlacementEvent, PlacementStore
 
 from .cluster import ClusterState
-from .events import EventTimeline, ServerEvent
+from .events import EventTimeline, RackEvent, ServerEvent
 from .policies import Policy, SchedulingPolicy, make_policy
+from .resilience import ResilienceConfig
 
 __all__ = ["SchedulingEngine", "SimResult"]
 
 
 @dataclasses.dataclass
 class SimResult:
+    """Outcome of one run.  Jobs partition into completed (``jct``),
+    failed (``failed_jobs``: data loss), and shed (``shed_jobs``:
+    rejected by admission control before any work ran).  Every JCT
+    statistic (``mean_jct``, percentiles, ``jct_cdf``) is over completed
+    jobs only — shed jobs are counted separately, never averaged in."""
+
     jct: dict[int, int]  # job_id -> completion time (slots)
     overhead_s: list[float]  # per-arrival scheduling wall time
     makespan: int
@@ -69,10 +76,20 @@ class SimResult:
     # serve requests still in flight when the plane drained (their
     # latencies are NOT in serve_latency — they never finished)
     inflight_requests: int = 0
+    # jobs rejected by admission control: job_id -> would-be arrival slot
+    shed_jobs: dict[int, int] = dataclasses.field(default_factory=dict)
+    deferred_peak: int = 0  # high-water mark of the admission queue
+    retries: int = 0  # data-loss retry attempts fired (event mode)
+    heap_peak: int = 0  # high-water mark of the event heap (event mode)
+
+    @property
+    def n_shed(self) -> int:
+        return len(self.shed_jobs)
 
     @property
     def mean_jct(self) -> float:
-        # NaN, not 0.0: an empty result must not read as "instant JCT"
+        # NaN, not 0.0: an empty result must not read as "instant JCT" —
+        # including windows where every arriving job was shed
         return float(np.mean(list(self.jct.values()))) if self.jct else float("nan")
 
     @property
@@ -107,7 +124,7 @@ class SchedulingEngine:
         n_servers: int,
         policy: SchedulingPolicy | Policy | str = "wf",
         *,
-        events: tuple[ServerEvent | PlacementEvent, ...] = (),
+        events: tuple[ServerEvent | RackEvent | PlacementEvent, ...] = (),
         placement: PlacementStore | None = None,
         max_slots: int = 10_000_000,
         on_slot: Callable[[ClusterState, int], None] | None = None,
@@ -116,7 +133,8 @@ class SchedulingEngine:
         step_mode: str = "slot",
         stealing: bool = False,
         speculation: bool = False,
-        spec_factor: float = 2.0,
+        spec_factor: float | None = None,
+        resilience: ResilienceConfig | None = None,
         obs: ObsSession | None = None,
     ):
         if step_mode not in ("slot", "event"):
@@ -128,10 +146,22 @@ class SchedulingEngine:
                 "work-stealing/speculation are online mechanisms; they "
                 "require step_mode='event'"
             )
+        if step_mode == "slot" and (
+            resilience is not None and (resilience.admission or resilience.retry)
+        ):
+            raise ValueError(
+                "admission control / retry are online mechanisms; they "
+                "require step_mode='event'"
+            )
         self.step_mode = step_mode
         self.stealing = stealing
         self.speculation = speculation
         self.spec_factor = spec_factor
+        self.resilience = resilience
+        # data-loss interception (retry-with-backoff): set by the control
+        # plane; returns True when the stranded fragment was parked for a
+        # later retry instead of failing the job
+        self.on_data_loss: Callable[[int, dict[int, int]], bool] | None = None
         self.n_servers = n_servers
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
         self.events = tuple(sorted(events, key=lambda e: e.slot))
@@ -194,37 +224,79 @@ class SchedulingEngine:
 
     # ---- fault handling --------------------------------------------------
 
-    def _apply_event(self, ev: ServerEvent) -> None:
+    def _merge_stranded(
+        self,
+        stranded: list,
+        merged: dict[int, dict[int, int]] | None = None,
+    ) -> dict[int, dict[int, int]]:
+        """Merge stranded segments into per-job reassignment problems so
+        the policy can balance each job's displaced tasks jointly."""
+        cluster = self.cluster
+        if merged is None:
+            merged = {}
+        for seg in stranded:
+            if seg.job_id in cluster.failed:
+                continue
+            acc = merged.setdefault(seg.job_id, {})
+            for g, cnt in seg.per_group.items():
+                acc[g] = acc.get(g, 0) + cnt
+        return merged
+
+    def _reassign_stranded(self, merged: dict[int, dict[int, int]]) -> None:
+        """Re-place merged stranded fragments through the policy.  A job
+        whose every live replica is gone is parked for retry when the
+        control plane installed :attr:`on_data_loss` (and it accepts),
+        otherwise marked failed — the pre-resilience behavior."""
+        cluster = self.cluster
+        for job_id, per_group in merged.items():
+            if job_id in cluster.failed:
+                continue
+            job = cluster.jobs[job_id]
+            proj = cluster.project(job, per_group)
+            if proj is None:
+                hook = self.on_data_loss
+                if hook is not None and hook(job_id, per_group):
+                    continue
+                cluster.mark_failed(job_id)
+                continue
+            groups, gids = proj
+            prob = cluster.problem_for(job, groups)
+            assignment = self.policy.assign(prob)
+            if self.debug:
+                assignment.validate(prob)
+            cluster.enqueue(job_id, assignment, gids)
+            cluster.reassigned += sum(per_group.values())
+            if self.obs is not None:
+                self.obs.reassign(
+                    self.obs.sim_now, job_id, sum(per_group.values())
+                )
+
+    def _apply_rack_event(self, ev: RackEvent) -> None:
+        """Correlated fault: fail (or recover) every server in the rack
+        in one slot, merging each job's stranded fragments across the
+        whole rack before re-placement."""
+        cluster = self.cluster
+        if ev.kind == "fail":
+            merged: dict[int, dict[int, int]] = {}
+            for m in ev.servers:
+                if cluster.alive[m]:
+                    self._merge_stranded(cluster.fail_server(m), merged)
+            self._reassign_stranded(merged)
+        else:  # "recover"
+            for m in ev.servers:
+                if not cluster.alive[m]:
+                    cluster.recover_server(m)
+
+    def _apply_event(self, ev: ServerEvent | RackEvent) -> None:
+        if isinstance(ev, RackEvent):
+            self._apply_rack_event(ev)
+            return
         cluster = self.cluster
         m = ev.server
         if ev.kind == "fail":
-            stranded = cluster.fail_server(m)
-            # merge each job's stranded fragments into one reassignment
-            # problem so the policy can balance the job's tasks jointly
-            merged: dict[int, dict[int, int]] = {}
-            for seg in stranded:
-                if seg.job_id in cluster.failed:
-                    continue
-                acc = merged.setdefault(seg.job_id, {})
-                for g, cnt in seg.per_group.items():
-                    acc[g] = acc.get(g, 0) + cnt
-            for job_id, per_group in merged.items():
-                job = cluster.jobs[job_id]
-                proj = cluster.project(job, per_group)
-                if proj is None:
-                    cluster.mark_failed(job_id)
-                    continue
-                groups, gids = proj
-                prob = cluster.problem_for(job, groups)
-                assignment = self.policy.assign(prob)
-                if self.debug:
-                    assignment.validate(prob)
-                cluster.enqueue(job_id, assignment, gids)
-                cluster.reassigned += sum(per_group.values())
-                if self.obs is not None:
-                    self.obs.reassign(
-                        self.obs.sim_now, job_id, sum(per_group.values())
-                    )
+            self._reassign_stranded(
+                self._merge_stranded(cluster.fail_server(m))
+            )
         elif ev.kind == "recover":
             cluster.recover_server(m)
         elif ev.kind == "slowdown":
@@ -521,6 +593,7 @@ class SchedulingEngine:
                 stealing=self.stealing,
                 speculation=self.speculation,
                 spec_factor=self.spec_factor,
+                resilience=self.resilience,
                 max_slots=self.max_slots,
                 on_slot=self.on_slot,
                 debug=self.debug,

@@ -25,21 +25,38 @@ makespan, same failed set, same reassignment count.  Leftover timeline
 events after the last arrival has completed are dropped, exactly as the
 slot loop's termination drops them.
 
-Two *online* mechanisms exist only here (they need idle-edge timing the
-slot loop never observes):
+Four *online* mechanisms exist only here (they need idle-edge timing the
+slot loop never observes); their thresholds all live in
+:class:`repro.runtime.resilience.ResilienceConfig` (reprolint R009):
 
-- **work-stealing** (``stealing=True``): when a server's queue runs dry,
-  it pulls the locality-eligible tail fragments of one job from the most
-  backlogged donor and re-places them through the policy — the same
-  merge-fragments-per-job machinery the fail path uses for stranded
-  segments (paper Sec. II's eq. 2 busy vector is delta-corrected on both
-  sides).
-- **speculative replication** (``speculation=True``): a head fragment
-  whose drain estimate on its server is ``spec_factor``× worse than on
-  some idle, fully-eligible server is cloned there; both copies run
-  under shadow job ids, the job is credited ``max`` cumulative progress
+- **cost-based work-stealing** (``stealing=True``): when a server's
+  queue runs dry, it pulls locality-eligible tail fragments from a
+  backlogged donor until ~half the donor's eq. 2 backlog cost has moved
+  (dask-style half-split), re-placing each affected job jointly through
+  the policy — the fail path's merge-fragments-per-job machinery on the
+  idle edge, with the eq. 2 busy vector delta-corrected on both sides.
+  Steals below ``steal_min_gain`` are rejected, and donors that keep
+  yielding nothing are backed off exponentially.
+- **budgeted speculation** (``speculation=True``): a head fragment whose
+  completion estimate under this server's *observed* service rate (a
+  per-server EWMA of tasks completed per tick) is ``spec_factor``×
+  worse than under the best observed peer on the same job (or the clone
+  target's nominal rate) is cloned onto an idle, fully-eligible server; both copies run under
+  shadow job ids, the job is credited ``max`` cumulative progress
   (never the sum — losers contribute no eq. 2 credit), and the first
   copy to finish cancels the other with a busy-time delta-correction.
+  Concurrent pairs are capped by a global budget (adapted from the
+  observed clone win rate) plus a per-job launch quota.
+- **admission control** (``ResilienceConfig(admission=True)``): when the
+  max eq. 2 backlog exceeds ``lag_defer_budget`` slots, new arrivals
+  wait in a bounded pending queue; past ``lag_shed_budget`` (or a full
+  queue) they are shed — recorded on ``SimResult.shed_jobs`` — which
+  keeps the event heap bounded under sustained overload (ρ > 1).
+- **retry-with-backoff** (``ResilienceConfig(retry=True)``): a job
+  whose stranded fragment has no live replica left (server or rack
+  failure) parks the fragment and retries placement after an
+  exponential backoff instead of failing immediately, up to
+  ``retry_limit`` attempts.
 
 Serve traffic shares the timeline: :meth:`submit_request` routes token
 batches through a :class:`repro.serve.engine.ReplicaRouter` (or a full
@@ -66,8 +83,9 @@ from repro.placement import PlacementEvent, PlacementStore
 
 from .cluster import ClusterState, QueueSegment
 from .engine import SchedulingEngine, SimResult
-from .events import ServerEvent
+from .events import RackEvent, ServerEvent
 from .policies import Policy, SchedulingPolicy, make_policy
+from .resilience import ResilienceConfig, ResilienceState
 
 __all__ = ["ControlPlane"]
 
@@ -80,6 +98,14 @@ _P_HEARTBEAT = 4  # router / serve-pool drain
 
 # tick-phase names for obs spans, indexed by priority
 _PHASE_NAMES = ("event", "arrival", "request", "service", "heartbeat")
+
+
+@dataclasses.dataclass(frozen=True)
+class _Retry:
+    """Timeline payload: re-attempt placement of a parked job's stranded
+    fragment (data-loss retry-with-backoff)."""
+
+    job_id: int
 
 
 @dataclasses.dataclass
@@ -113,13 +139,14 @@ class ControlPlane:
         *,
         scenario: str | None = None,
         scenario_kw: dict | None = None,
-        events: tuple[ServerEvent | PlacementEvent, ...] = (),
+        events: tuple[ServerEvent | RackEvent | PlacementEvent, ...] = (),
         placement: PlacementStore | None = None,
         router=None,
         serve_pool=None,
         stealing: bool = False,
         speculation: bool = False,
-        spec_factor: float = 2.0,
+        spec_factor: float | None = None,
+        resilience: ResilienceConfig | None = None,
         max_slots: int = 10_000_000,
         on_slot: Callable[[ClusterState, int], None] | None = None,
         on_complete: Callable[[int, int], None] | None = None,
@@ -169,7 +196,19 @@ class ControlPlane:
         self.n_servers = n_servers
         self.stealing = stealing
         self.speculation = speculation
-        self.spec_factor = spec_factor
+        cfg = resilience if resilience is not None else ResilienceConfig()
+        if spec_factor is not None:  # legacy knob folds into the config
+            cfg = dataclasses.replace(cfg, spec_factor=spec_factor)
+        self.resilience = cfg
+        # feedback state only exists when some mechanism can consult it,
+        # keeping the default (all-off) path allocation-free
+        self._res: ResilienceState | None = (
+            ResilienceState(cfg, n_servers)
+            if cfg.needs_state(stealing, speculation)
+            else None
+        )
+        if cfg.retry:
+            self.engine.on_data_loss = self._park_for_retry
         self.max_slots = max_slots
         self.on_slot = on_slot
         self.on_complete = on_complete
@@ -193,11 +232,13 @@ class ControlPlane:
         self.steals = 0
         self.speculations = 0
         self.spec_cancels = 0
+        self.retries = 0
         self.dropped_events = 0
+        self.heap_peak = 0
         self._pairs: list[_SpecPair] = []
         self._specs: dict[int, tuple[_SpecPair, int]] = {}  # shadow id -> (pair, copy)
         self._spec_jobs: set[int] = set()  # real ids with a live pair
-        self._spec_seq = 0
+        self._shadow_seq = 0
 
         for ev in events:
             self._push(max(ev.slot, 0), _P_EVENT, ev)
@@ -286,6 +327,7 @@ class ControlPlane:
 
     def result(self) -> SimResult:
         cluster = self.engine.cluster
+        st = self._res
         return SimResult(
             jct=self.jct,
             overhead_s=self.overheads,
@@ -297,6 +339,10 @@ class ControlPlane:
             spec_cancels=self.spec_cancels,
             serve_latency=self.serve_latency,
             inflight_requests=len(self._submit_t),
+            shed_jobs=dict(st.shed) if st is not None else {},
+            deferred_peak=st.deferred_peak if st is not None else 0,
+            retries=self.retries,
+            heap_peak=self.heap_peak,
         )
 
     # ---- event queue -----------------------------------------------------
@@ -304,6 +350,8 @@ class ControlPlane:
     def _push(self, t: int, prio: int, payload) -> None:
         heapq.heappush(self._heap, (t, prio, self._seq, payload))
         self._seq += 1
+        if len(self._heap) > self.heap_peak:
+            self.heap_peak = len(self._heap)
 
     def _has_pending_work(self) -> bool:
         return (
@@ -355,7 +403,9 @@ class ControlPlane:
         # reorder rescans — fold every pair back to its real job first
         self._cancel_all_specs()
         self._makespan = max(self._makespan, t + 1)
-        if isinstance(ev, PlacementEvent):
+        if isinstance(ev, _Retry):
+            self._retry_fire(t, ev.job_id)
+        elif isinstance(ev, PlacementEvent):
             self.engine._apply_placement_event(ev)
         else:
             self.engine._apply_event(ev)
@@ -377,9 +427,13 @@ class ControlPlane:
                     self.on_complete(job.job_id, 0)
                 continue
             batch.append(job)
+        if self.resilience.admission and batch:
+            batch = self._admission_filter(t, batch)
         if batch:
             self.overheads.extend(self.engine._admit_burst(batch))
             self._ensure_service(t)
+        elif self._res is not None and self._res.deferred:
+            self._ensure_service(t)  # keep the drain loop ticking
 
     def _handle_request(self, t: int, payload) -> None:
         rid, n_tokens, model, adapter, eligible, request = payload
@@ -414,6 +468,9 @@ class ControlPlane:
             # comparable total order with the heap property intact
             sanitizers.check_event_heap(self._heap)
         cluster = self.engine.cluster
+        st = self._res
+        if st is not None and self.resilience.admission and st.deferred:
+            self._admit_deferred(t)
         if self.stealing:
             self._steal_scan()
         done: dict[int, int] = {}
@@ -423,6 +480,8 @@ class ControlPlane:
                 pair.done[ci] += n
             else:
                 done[job_id] = done.get(job_id, 0) + n
+        if st is not None and self.speculation:
+            st.observe_service(cluster)  # rate EWMAs for straggler detection
         for pair in list(self._pairs):
             adv = max(pair.done)
             if adv > pair.credited:  # credit = best copy's delta, never the sum
@@ -453,7 +512,7 @@ class ControlPlane:
             self._spec_scan()
         if o is not None:
             o.snapshot(t, cluster)
-        if any(cluster.queues):
+        if any(cluster.queues) or (st is not None and st.deferred):
             self._ensure_service(t + 1)
 
     def _handle_heartbeat(self, t: int) -> None:
@@ -504,47 +563,76 @@ class ControlPlane:
                 donors.sort(key=lambda p: (-busy[p], p))
 
     def _steal_for(self, m: int, donors: list[int]) -> bool:
+        """Pull locality-eligible tail fragments from the first ready
+        donor until ~half its eq. 2 backlog cost has moved (dask-style
+        half-split), then re-place each affected job jointly — the fail
+        path's merge-per-job machinery on the idle edge.  Donors whose
+        eligible tail is worth less than ``steal_min_gain`` count as a
+        miss and back off exponentially."""
         cluster = self.engine.cluster
+        st = self._res
+        cfg = self.resilience
         if self.obs is not None:
             self.obs.steal_attempt(self._now, m)
+        busy = cluster.busy_times()
         for p in donors:
+            if not st.steal_ready(p, self._now):
+                continue
             q = list(cluster.queues[p])
             if len(q) < 2:
                 continue
             # tail-first; the head is in service and shadow copies are
             # pinned to their server, so neither is stealable
-            victim = None
+            target = int(busy[p]) // 2
+            plan: list[tuple[QueueSegment, list[int]]] = []
+            planned = 0
             for seg in reversed(q[1:]):
                 if seg.job_id < 0:
                     continue
                 job = cluster.jobs[seg.job_id]
-                if any(m in job.groups[g].servers for g in seg.per_group):
-                    victim = seg
-                    break
-            if victim is None:
-                continue
-            job = cluster.jobs[victim.job_id]
-            # merge every eligible tail fragment of that job on the donor
-            # into one reassignment problem (exactly like fail stranding)
-            merged: dict[int, int] = {}
-            for seg in [s for s in q[1:] if s.job_id == victim.job_id]:
                 gids = [g for g in seg.per_group if m in job.groups[g].servers]
-                if gids:
-                    for g, cnt in cluster.pull_from_segment(p, seg, gids).items():
-                        merged[g] = merged.get(g, 0) + cnt
-            proj = cluster.project(job, merged)
-            assert proj is not None  # m is alive and eligible for every gid
-            groups, gids = proj
-            prob = cluster.problem_for(job, groups)
-            assignment = self.engine.policy.assign(prob)
-            if self.engine.debug:
-                assignment.validate(prob)
-            cluster.enqueue(victim.job_id, assignment, gids)
-            self.steals += sum(merged.values())
-            if self.obs is not None:
-                self.obs.steal(
-                    self._now, victim.job_id, p, m, sum(merged.values())
-                )
+                if not gids:
+                    continue
+                mu = int(cluster.effective_mu(job)[p])
+                pulled = sum(seg.per_group[g] for g in gids)
+                # donor-side eq. 2 slots this pull frees (ceil deltas)
+                gain = -(-seg.total // mu) - -(-(seg.total - pulled) // mu)
+                plan.append((seg, gids))
+                planned += gain
+                if planned >= target:
+                    break
+            if not plan:
+                # thief-specific ineligibility says nothing about the
+                # donor — skip silently, no backoff
+                continue
+            if planned < cfg.steal_min_gain:
+                st.steal_missed(p, self._now)
+                continue
+            # merge the pulls per job (insertion order) so the policy
+            # balances each job's moved tasks jointly
+            merged: dict[int, dict[int, int]] = {}
+            for seg, gids in plan:
+                per = merged.setdefault(seg.job_id, {})
+                for g, cnt in cluster.pull_from_segment(p, seg, gids).items():
+                    per[g] = per.get(g, 0) + cnt
+            moved = 0
+            for job_id, per_group in merged.items():
+                job = cluster.jobs[job_id]
+                proj = cluster.project(job, per_group)
+                assert proj is not None  # m is alive and eligible per gid
+                groups, gids = proj
+                prob = cluster.problem_for(job, groups)
+                assignment = self.engine.policy.assign(prob)
+                if self.engine.debug:
+                    assignment.validate(prob)
+                cluster.enqueue(job_id, assignment, gids)
+                n = sum(per_group.values())
+                moved += n
+                if self.obs is not None:
+                    self.obs.steal(self._now, job_id, p, m, n)
+            self.steals += moved
+            st.steal_won(p)
+            st.metrics.inc("steal.moved_cost", planned)
             return True
         return False
 
@@ -552,46 +640,92 @@ class ControlPlane:
 
     def _spec_scan(self) -> None:
         """Clone straggling head fragments onto idle, fully-eligible
-        servers; both copies run under shadow ids until one finishes."""
+        servers; both copies run under shadow ids until one finishes.
+
+        Detection is *progress-based*: a head fragment is a straggler
+        when this server's observed service-rate EWMA lags the best peer
+        serving the same job by ``spec_factor``× — not when the static
+        mu table says it should be slow.  Launches are bounded by the
+        adaptive global pair budget and a per-job lifetime quota."""
         cluster = self.engine.cluster
+        st = self._res
+        cfg = self.resilience
+        budget = st.adapted_spec_budget()
+        if len(self._pairs) >= budget:
+            return
         idle = [
             m
             for m in range(self.n_servers)
             if cluster.alive[m] and not cluster.queues[m]
         ]
+        if not idle:
+            return
+        # job -> servers currently holding one of its head fragments
+        serving: dict[int, list[int]] = {}
+        for p in range(self.n_servers):
+            if cluster.alive[p] and cluster.queues[p]:
+                j = cluster.queues[p][0].job_id
+                if j >= 0:
+                    serving.setdefault(j, []).append(p)
         for m in range(self.n_servers):
-            if not idle:
+            if not idle or len(self._pairs) >= budget:
                 return
             if not cluster.alive[m] or not cluster.queues[m]:
                 continue
             seg = cluster.queues[m][0]
-            if seg.job_id < 0 or seg.job_id in self._spec_jobs:
+            j = seg.job_id
+            if j < 0 or j in self._spec_jobs:
                 continue
-            job = cluster.jobs[seg.job_id]
+            if st.spec_launched.get(j, 0) >= cfg.spec_job_quota:
+                continue
+            # need a stable rate observation on exactly this head first
+            if (
+                int(st.head_streak[m]) < cfg.spec_detect_window
+                or int(st.head_job[m]) != j
+            ):
+                continue
+            job = cluster.jobs[j]
             gids = list(seg.per_group)
-            mu_here = int(cluster.effective_mu(job)[m])
-            est_here = -(-seg.total // mu_here)
-            best = best_est = None
+            best = None
+            best_mu = 0
             for i in idle:
                 # the clone carries the whole fragment, so the target
                 # must be in EVERY constituent group's locality set
                 if all(i in job.groups[g].servers for g in gids):
-                    est = -(-seg.total // int(cluster.effective_mu(job)[i]))
-                    if best_est is None or (est, i) < (best_est, best):
-                        best, best_est = i, est
+                    mu_i = int(cluster.effective_mu(job)[i])
+                    if best is None or (-mu_i, i) < (-best_mu, best):
+                        best, best_mu = i, mu_i
             if best is None:
                 continue
-            if est_here < self.spec_factor * best_est or est_here - best_est < 1:
+            rate_here = float(st.rate[m])
+            peers = [
+                p
+                for p in serving.get(j, ())
+                if p != m and st.head_streak[p] > 0
+            ]
+            # reference speed: the best observed peer on the same job, or
+            # the clone target's nominal rate when no peer was measured
+            ref_rate = max(
+                max((float(st.rate[p]) for p in peers), default=0.0),
+                float(best_mu),
+            )
+            # straggler test on *completion estimates* from observed
+            # rates (ceil granularity matters: a 2-slot head vs a 1-slot
+            # clone is already a 2x straggler)
+            est_here = -(-seg.total // max(int(rate_here), 1))
+            est_ref = -(-seg.total // max(int(ref_rate), 1))
+            if est_here < cfg.spec_factor * est_ref or est_here - est_ref < 1:
                 continue
             self._launch_spec(m, seg, best)
+            st.spec_launched[j] = st.spec_launched.get(j, 0) + 1
             idle.remove(best)
 
     def _launch_spec(self, m: int, seg: QueueSegment, target: int) -> None:
         cluster = self.engine.cluster
         job = cluster.jobs[seg.job_id]
-        shadow_a = -1 - 2 * self._spec_seq
-        shadow_b = -2 - 2 * self._spec_seq
-        self._spec_seq += 1
+        shadow_a = -1 - 2 * self._shadow_seq
+        shadow_b = -2 - 2 * self._shadow_seq
+        self._shadow_seq += 1
         # same mu, so relabeling leaves every segment cost unchanged —
         # the incremental eq. 2 vector needs no correction here
         cluster.jobs[shadow_a] = dataclasses.replace(job, job_id=shadow_a)
@@ -622,8 +756,17 @@ class ControlPlane:
         fold the survivor back to the real job id."""
         cluster = self.engine.cluster
         winner = 0 if pair.done[0] >= pair.done[1] else 1
+        finished = max(pair.done) >= pair.size
+        if self._res is not None:
+            # mirrored into the PRIVATE registry: budget adaptation reads
+            # these back, so they must exist with or without ambient obs
+            self._res.record_spec_outcome(
+                "spec.aborted"
+                if not finished
+                else ("spec.won_original" if winner == 0 else "spec.won_clone")
+            )
         if self.obs is not None:
-            outcome = winner if max(pair.done) >= pair.size else SPEC_ABORTED
+            outcome = winner if finished else SPEC_ABORTED
             self.obs.spec_resolve(
                 self._now, pair.job_id, outcome, max(pair.done), pair.obs_link
             )
@@ -651,3 +794,119 @@ class ControlPlane:
                 cluster.remaining[pair.job_id] -= adv - pair.credited
                 pair.credited = adv
             self._close_pair(pair)
+
+    # ---- admission control / load shedding -------------------------------
+
+    def _admission_filter(self, t: int, batch: list[Job]) -> list[Job]:
+        """Defer (or shed) arrivals while the eq. 2 backlog is past its
+        lag budgets.  Returns the sub-batch to admit immediately — all of
+        it on the healthy fast path, none of it once deferral starts
+        (later arrivals must queue behind already-deferred jobs)."""
+        cluster = self.engine.cluster
+        st = self._res
+        cfg = self.resilience
+        lag = int(cluster.busy_times().max())
+        if lag <= cfg.lag_defer_budget and not st.deferred:
+            return batch
+        for job in batch:
+            if (
+                lag > cfg.lag_shed_budget
+                or len(st.deferred) >= cfg.defer_queue_cap
+            ):
+                self._shed(t, job)
+            else:
+                st.deferred.append(job)
+                st.metrics.inc("admit.deferred")
+                if self.obs is not None:
+                    self.obs.job_deferred(t, job.job_id)
+        if len(st.deferred) > st.deferred_peak:
+            st.deferred_peak = len(st.deferred)
+        return []
+
+    def _shed(self, t: int, job: Job) -> None:
+        """Drop an arrival outright: it never enters the cluster books
+        (so ``_has_pending_work`` can still reach quiescence) and is
+        recorded on :attr:`SimResult.shed_jobs` with its would-be
+        arrival slot."""
+        cluster = self.engine.cluster
+        cluster.jobs.pop(job.job_id, None)
+        cluster.remaining.pop(job.job_id, None)
+        st = self._res
+        st.shed[job.job_id] = job.arrival
+        st.metrics.inc("jobs.shed")
+        if self.obs is not None:
+            self.obs.job_shed(t, job.job_id)
+
+    def _admit_deferred(self, t: int) -> None:
+        """Drain the pending queue FIFO while the lag stays inside the
+        defer budget; called at the top of every service tick."""
+        cluster = self.engine.cluster
+        st = self._res
+        cfg = self.resilience
+        while st.deferred:
+            lag = int(cluster.busy_times().max())
+            if lag > cfg.lag_defer_budget:
+                break
+            job = st.deferred.popleft()
+            self.overheads.extend(self.engine._admit_burst([job]))
+
+    # ---- retry-with-backoff on data loss ---------------------------------
+
+    def _park_for_retry(self, job_id: int, per_group: dict[int, int]) -> bool:
+        """Engine data-loss hook: a stranded fragment with no live
+        replica left is parked and a placement retry scheduled after an
+        exponential backoff, instead of failing the job.  Returns False
+        once attempts are exhausted (the engine then fails it)."""
+        st = self._res
+        cfg = self.resilience
+        attempts = st.retry_attempts.get(job_id, 0)
+        if attempts >= cfg.retry_limit:
+            return False
+        parked = st.parked.setdefault(job_id, {})
+        for g, cnt in per_group.items():
+            parked[g] = parked.get(g, 0) + cnt
+        if job_id not in st.retry_due:
+            delay = min(
+                cfg.retry_backoff_base << attempts, cfg.retry_backoff_max
+            )
+            st.retry_due.add(job_id)
+            self._push(self._now + delay, _P_EVENT, _Retry(job_id))
+            st.metrics.inc("retry.parked")
+        return True
+
+    def _retry_fire(self, t: int, job_id: int) -> None:
+        """Timeline side of the retry: re-attempt placement of the
+        parked fragment; re-park (or fail, once exhausted) when there is
+        still no live replica — e.g. the rack has not recovered yet."""
+        cluster = self.engine.cluster
+        st = self._res
+        st.retry_due.discard(job_id)
+        per_group = st.parked.pop(job_id, None)
+        if (
+            per_group is None
+            or job_id in cluster.failed
+            or job_id not in cluster.remaining
+        ):
+            return
+        st.retry_attempts[job_id] = st.retry_attempts.get(job_id, 0) + 1
+        st.metrics.inc("retry.attempted")
+        self.retries += 1
+        if self.obs is not None:
+            self.obs.job_retry(t, job_id)
+        job = cluster.jobs[job_id]
+        proj = cluster.project(job, per_group)
+        if proj is None:
+            if not self._park_for_retry(job_id, per_group):
+                cluster.mark_failed(job_id)
+                st.metrics.inc("retry.exhausted")
+            return
+        groups, gids = proj
+        prob = cluster.problem_for(job, groups)
+        assignment = self.engine.policy.assign(prob)
+        if self.engine.debug:
+            assignment.validate(prob)
+        cluster.enqueue(job_id, assignment, gids)
+        cluster.reassigned += sum(per_group.values())
+        if self.obs is not None:
+            self.obs.reassign(t, job_id, sum(per_group.values()))
+        self._ensure_service(t)

@@ -36,6 +36,7 @@ from .cluster_v2017 import (
     trace_available,
 )
 from .pareto import ParetoTraceConfig, generate_pareto_trace
+from .resilience import overload_client, rack_failure_timeline, saturation_qps
 
 __all__ = [
     "TraceConfig",
@@ -55,6 +56,9 @@ __all__ = [
     "available_scenarios",
     "poisson_client",
     "replay_client",
+    "overload_client",
+    "rack_failure_timeline",
+    "saturation_qps",
 ]
 
 # scenario -> (config dataclass, generator); the registry owns the

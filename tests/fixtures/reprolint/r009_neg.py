@@ -1,0 +1,23 @@
+"""R009 negative: thresholds read from the config; structural literals
+and named-constant definitions stay exempt."""
+
+SPEC_LAUNCH_CODE = 8  # ALL_CAPS named-constant definition, not a tunable
+
+
+def maybe_shed(queue, lag, cfg):
+    if lag > cfg.lag_shed_budget:  # threshold read from the config
+        return True
+    return bool(queue)
+
+
+def drain(state):
+    # zero/unit/sentinel compares are structural, not tunables
+    while state.deferred and state.steal_count > 0:
+        state.deferred.pop()
+    return state.retry_attempts - 1
+
+
+def build(make_config, overrides):
+    # constructing a config with explicit keyword values is the
+    # sanctioned API for carrying thresholds
+    return make_config(lag_defer_budget=overrides["defer"], retry=True)

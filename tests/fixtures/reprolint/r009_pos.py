@@ -1,0 +1,21 @@
+"""R009 positive: resilience thresholds re-derived as inline literals
+instead of being read from ResilienceConfig."""
+
+
+def maybe_shed(queue, lag):
+    if lag > 64:  # defer budget duplicated from the config default
+        return True
+    return bool(queue)
+
+
+def launch_clones(straggler, spec_factor=2.0):  # tunable as a default
+    return [straggler] * int(spec_factor)
+
+
+def next_wait(backoff_base, misses):
+    return (backoff_base + 2) << misses  # arithmetic on a tunable
+
+
+class Plane:
+    def __init__(self):
+        self.retry_limit = 3  # per-instance copy of a config field
